@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing, CSV emission, FLOP math."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of jit'd fn; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def fft_flops(n: int, batch: int = 1) -> float:
+    """Canonical 5 N log2 N real-op count for a complex FFT."""
+    return 5.0 * n * np.log2(n) * batch
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

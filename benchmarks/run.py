@@ -1,0 +1,17 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import table1_fft_variants, table2_ablation, table3_fft2d
+    for mod in (table1_fft_variants, table2_ablation, table3_fft2d):
+        try:
+            mod.run()
+        except Exception as ex:                          # pragma: no cover
+            print(f"{mod.__name__},0.0,ERROR={ex!r}", file=sys.stderr)
+            raise
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 1 — the single-core optimisation ladder for a 16384-element
+FFT, reproduced on this repo's TPU-adapted variants.
+
+Paper (Wormhole n300, ms): Initial 14.39 -> Chunked 9.38 -> ThCon 7.56 ->
+128-bit 6.61 -> Single copy 5.31; Xeon core 1.85.
+
+Mapping (DESIGN.md §2): *Initial* = per-stage gather/scatter radix-2
+(``cooley_tukey``); *Single data copy* = fused next-step reorder
+(``cooley_tukey_fused``); the TPU-native end-points of the ladder are
+*Stockham* (reorder-free, contiguous) and *four-step* (MXU matmul form).
+Pallas kernels run in interpret mode (correctness path); their TPU cost is
+the dry-run roofline, so wall times here compare the pure-JAX variants and
+``derived`` reports GFLOP/s on this host CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fft1d, from_complex
+from .common import emit, fft_flops, time_fn
+
+N = 16384
+BATCH = 8
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((BATCH, N)).astype(np.float32)
+    y = rng.standard_normal((BATCH, N)).astype(np.float32)
+    z = from_complex(jnp.asarray(x + 1j * y, jnp.complex64))
+
+    variants = [
+        ("table1/initial_two_reorder",
+         functools.partial(fft1d.fft_cooley_tukey, variant="two_reorder")),
+        ("table1/single_copy_one_reorder",
+         functools.partial(fft1d.fft_cooley_tukey, variant="one_reorder")),
+        ("table1/stockham_autosort", fft1d.fft_stockham),
+        ("table1/four_step_matmul", fft1d.fft_four_step),
+        ("table1/naive_dft_matmul", None),   # O(N^2): skipped at this size
+    ]
+    ref = np.fft.fft(np.asarray(x + 1j * y))
+    for name, fn in variants:
+        if fn is None:
+            emit(name, 0.0, "skipped_oN2_at_16384")
+            continue
+        jitted = jax.jit(lambda q, f=fn: f(q))
+        out = jitted(z)
+        got = np.asarray(out.re) + 1j * np.asarray(out.im)
+        err = np.abs(got - ref).max() / np.abs(ref).max()
+        us = time_fn(jitted, z)
+        gflops = fft_flops(N, BATCH) / (us * 1e-6) / 1e9
+        emit(name, us, f"gflops={gflops:.2f};rel_err={err:.1e}")

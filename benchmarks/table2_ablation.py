@@ -1,0 +1,75 @@
+"""Paper Table 2 — component ablation: which part of the per-stage FFT
+pipeline costs what.
+
+The paper disables read-reorder / compute / write-reorder on the Tensix and
+finds reordering dominates (14.4 ms full vs 0.9 ms compute-only).  We ablate
+the same components of the paper-faithful ``cooley_tukey`` variant: the
+gather ("read reorder"), the butterfly arithmetic ("compute") and the
+scatter ("write reorder"), timing each pipeline on this host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fft1d, from_complex
+from repro.core.complexmath import SplitComplex
+from repro.core import complexmath as cm
+from repro.core import twiddle as tw
+from .common import emit, time_fn
+
+N = 16384
+BATCH = 8
+
+
+def _pipeline(read_reorder: bool, compute: bool, write_reorder: bool):
+    """The per-stage pipeline with components toggled (paper Table 2)."""
+    rev, stages = fft1d._ct_stage_indices(N)
+    w_table = tw.twiddles(N, dtype=jnp.float32)
+    half = N // 2
+
+    def fn(z: SplitComplex) -> SplitComplex:
+        z = fft1d._take(z, rev)
+        for (idx0, idx1, tw_idx, inv_perm) in stages:
+            if read_reorder:
+                lhs = fft1d._take(z, idx0)
+                rhs = fft1d._take(z, idx1)
+            else:                      # contiguous halves: no gather
+                lhs = SplitComplex(z.re[..., :half], z.im[..., :half])
+                rhs = SplitComplex(z.re[..., half:], z.im[..., half:])
+            if compute:
+                w = fft1d._take(w_table, tw_idx)
+                f = cm.mul(rhs, w)
+                out0, out1 = cm.add(lhs, f), cm.sub(lhs, f)
+            else:
+                out0, out1 = lhs, rhs
+            cat = SplitComplex(
+                jnp.concatenate([out0.re, out1.re], axis=-1),
+                jnp.concatenate([out0.im, out1.im], axis=-1))
+            z = fft1d._take(cat, inv_perm) if write_reorder else cat
+        return z
+
+    return jax.jit(fn)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    z = from_complex(jnp.asarray(
+        rng.standard_normal((BATCH, N)) + 1j * rng.standard_normal((BATCH, N)),
+        jnp.complex64))
+    cases = [
+        ("table2/full_pipeline", (True, True, True)),
+        ("table2/no_read_reorder", (False, True, True)),
+        ("table2/no_write_reorder", (True, True, False)),
+        ("table2/no_reorder_at_all", (False, True, False)),
+        ("table2/compute_disabled", (True, False, True)),
+        ("table2/reorder_only", (True, False, False)),
+    ]
+    base_us = None
+    for name, (r, c, w) in cases:
+        fn = _pipeline(r, c, w)
+        us = time_fn(fn, z)
+        if base_us is None:
+            base_us = us
+        emit(name, us, f"fraction_of_full={us / base_us:.3f}")

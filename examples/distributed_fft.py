@@ -1,0 +1,70 @@
+"""Distributed pencil FFT demo on 8 (emulated) devices.
+
+Shows the paper's Section 5 pattern at multi-device scale: local row FFTs,
+all_to_all global transpose, local column FFTs — plus the chunked-overlap
+and hierarchical multi-pod schedules.
+
+    python examples/distributed_fft.py        (sets its own XLA_FLAGS)
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np                                       # noqa: E402
+import jax                                               # noqa: E402
+import jax.numpy as jnp                                  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.complexmath import SplitComplex, from_complex, to_complex  # noqa: E402
+from repro.dist import pencil                            # noqa: E402
+
+
+def main():
+    rng = np.random.default_rng(0)
+    H = W = 512
+    x = (rng.standard_normal((H, W))
+         + 1j * rng.standard_normal((H, W))).astype(np.complex64)
+    ref = np.fft.fft2(x)
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = NamedSharding(mesh, P("data", None))
+    z = from_complex(jnp.asarray(x))
+    z = SplitComplex(jax.device_put(z.re, sh), jax.device_put(z.im, sh))
+
+    out = pencil.pfft2(z, mesh, "data")                 # 1 all_to_all
+    err = np.abs(np.asarray(to_complex(out)).T - ref).max() / np.abs(ref).max()
+    print(f"pfft2 (single all_to_all)        rel err {err:.2e}")
+
+    out = pencil.pfft2(z, mesh, "data", chunks=4)       # overlapped schedule
+    err = np.abs(np.asarray(to_complex(out)).T - ref).max() / np.abs(ref).max()
+    print(f"pfft2 (4-chunk overlap schedule) rel err {err:.2e}")
+
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh2 = NamedSharding(mesh2, P(("pod", "data"), None))
+    z2 = SplitComplex(jax.device_put(jnp.real(jnp.asarray(x)), sh2),
+                      jax.device_put(jnp.imag(jnp.asarray(x)), sh2))
+    out = pencil.pfft2_hierarchical(z2, mesh2)          # two-hop multi-pod
+    err = np.abs(np.asarray(to_complex(out)).T - ref).max() / np.abs(ref).max()
+    print(f"pfft2_hierarchical (2 pods x 4)  rel err {err:.2e}")
+
+    # one giant distributed 1-D FFT
+    n = 1 << 16
+    v = (rng.standard_normal(n) + 1j * rng.standard_normal(n)) \
+        .astype(np.complex64)
+    mesh1 = jax.make_mesh((8,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    sh1 = NamedSharding(mesh1, P("data"))
+    vz = from_complex(jnp.asarray(v))
+    vz = SplitComplex(jax.device_put(vz.re, sh1), jax.device_put(vz.im, sh1))
+    out = pencil.pfft1d(vz, mesh1, "data")
+    back = pencil.pfft1d(out, mesh1, "data", inverse=True)
+    err = np.abs(np.asarray(to_complex(back)) - v).max()
+    print(f"pfft1d 65536 roundtrip           max err {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

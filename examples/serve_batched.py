@@ -1,0 +1,19 @@
+"""Batched serving example: the slot-based engine decodes a stream of
+requests for a reduced h2o-danube (SWA ring cache exercised).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    sys.argv = [sys.argv[0], "--arch", "h2o-danube-1.8b", "--reduced",
+                "--requests", "6", "--batch-size", "3", "--max-new", "12"] \
+        + sys.argv[1:]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

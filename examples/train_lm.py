@@ -1,0 +1,27 @@
+"""End-to-end training driver example: a ~15M-param FNet-style LM (the
+paper's FFT as the token mixer) trained for a few hundred steps on CPU,
+with checkpointing and resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+This drives the same launcher a cluster run uses:
+    python -m repro.launch.train --arch fnet_demo --steps 200 ...
+Scale up by dropping --reduced and binding --mesh single|multi.
+"""
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    argv = ["--arch", "fnet_demo", "--reduced",
+            "--steps", "200", "--seq-len", "128", "--global-batch", "8",
+            "--lr", "3e-3", "--ckpt-dir", "runs/ckpt_example",
+            "--ckpt-every", "100", "--log-every", "20"]
+    extra = sys.argv[1:]
+    sys.argv = [sys.argv[0]] + argv + extra
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

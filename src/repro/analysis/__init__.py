@@ -1,0 +1,1 @@
+"""repro.analysis — loop-aware HLO cost extraction + roofline model."""

@@ -1,0 +1,417 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — under
+scan-over-layers (mandatory at this scale: compile time must not grow with
+depth) that undercounts FLOPs/bytes by the trip count (96x for nemotron).
+Verified empirically: scan(length=2/4/8) of a matmul all report identical
+flops.
+
+This module parses the optimized HLO text (which carries
+``backend_config={"known_trip_count":{"n":...}}`` on while ops) and
+recursively accumulates, with loop multiplication:
+
+- ``flops``      dot/convolution MACs x2 (exact from shapes + contracting
+                 dims) plus 1 FLOP per output element of elementwise ops
+                 inside fusions (the same convention HloCostAnalysis uses);
+- ``traffic``    an HBM-traffic model: operand + result bytes at every
+                 fusion/op boundary in non-fused computations (intra-fusion
+                 values never touch HBM);
+- ``collectives``  payload bytes per collective kind (all-reduce, all-gather,
+                 reduce-scatter, all-to-all, collective-permute).
+
+It is a *model*, not a simulator: good to ~2x, loop-exact, and consistent
+across the optimization iterations in EXPERIMENTS.md §Perf (the deltas are
+what drive decisions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.+\{\s*$")
+_OPCODE_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = TYPE opcode(operands), attrs' with balanced-paren
+    tuple types (nested tuples broke a single-regex approach and silently
+    dropped while ops)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):                   # tuple type: balance parens
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        typ = rest[:i + 1]
+        tail = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        typ = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    m = _OPCODE_RE.match(tail)
+    if not m:
+        return None
+    opcode = m.group(1)
+    body = tail[m.end():]
+    return name, typ, opcode, body
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVE_OPS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute", "all-reduce-start",
+                   "all-gather-start", "collective-permute-start",
+                   "ragged-all-to-all"}
+
+_ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+                "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                "negate", "abs", "and", "or", "compare", "select", "cosine",
+                "sine", "floor", "ceil", "sign", "atan2", "logistic",
+                "exponential-minus-one", "log-plus-one", "clamp"}
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "opt-barrier"}
+
+
+def shape_numel(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type: str
+    opcode: str
+    rest: str           # everything after the '(' — operands + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symtab: Dict[str, str]           # value name -> type string
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.strip().endswith("{"):
+                cur = Computation(m.group(2), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            op = Op(*parsed)
+            cur.ops.append(op)
+            cur.symtab[op.name] = op.type
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k in self.collectives:
+            self.collectives[k] += other.collectives[k] * mult
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out_numel = shape_numel(op.type)
+    mm = _OPERAND_RE.search(op.rest)
+    k = 1
+    if mm:
+        lhs_type = symtab.get(mm.group(1), "")
+        dims = _shape_dims(lhs_type)
+        cm = _LHS_C_RE.search(op.rest)
+        if cm and cm.group(1):
+            for d in cm.group(1).split(","):
+                di = int(d)
+                if di < len(dims):
+                    k *= dims[di]
+    return 2.0 * out_numel * k
+
+
+def _conv_flops(op: Op, symtab: Dict[str, str]) -> float:
+    # flops ~= 2 * out_numel * (kernel elements per output / out features)
+    ops = _OPERAND_RE.findall(op.rest)
+    out_numel = shape_numel(op.type)
+    if len(ops) >= 2:
+        k_dims = _shape_dims(symtab.get(ops[1], ""))
+        if k_dims:
+            import numpy as np
+            k_per_out = max(1, int(np.prod(k_dims)) // max(1, k_dims[-1]))
+            return 2.0 * out_numel * k_per_out
+    return 2.0 * out_numel
+
+
+def _collective_kind(opcode: str) -> Optional[str]:
+    base = opcode[:-6] if opcode.endswith("-start") else opcode
+    if base == "ragged-all-to-all":
+        base = "all-to-all"
+    return base if base in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute") else None
+
+
+def analyze(text: str, entry: Optional[str] = None) -> Cost:
+    comps = parse_module(text)
+    if entry is None:
+        # the last computation in the module is ENTRY by convention; find by
+        # name match from the module header instead
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry = m.group(1) if m else list(comps)[-1]
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def comp_cost(name: str, fused: bool) -> Cost:
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()                    # cycle guard
+        c = comps.get(name)
+        if c is None:
+            return memo[key]
+        total = Cost()
+        for op in c.ops:
+            oc = op.opcode
+            if oc in _FREE_OPS:
+                continue
+            kind = _collective_kind(oc)
+            if kind:
+                b = shape_bytes(op.type)
+                total.collectives[kind] += b
+                total.traffic += b
+                continue
+            if oc == "while":
+                bm = _BODY_RE.search(op.rest)
+                tm = _TRIP_RE.search(op.rest)
+                trips = int(tm.group(1)) if tm else 1
+                if bm:
+                    total.add(comp_cost(bm.group(1), False), trips)
+                cm = _COND_RE.search(op.rest)
+                if cm:
+                    total.add(comp_cost(cm.group(1), False), trips)
+                continue
+            if oc == "conditional":
+                bm = _BRANCHES_RE.search(op.rest)
+                if bm:
+                    branches = [b.strip().lstrip("%")
+                                for b in bm.group(1).split(",")]
+                    costs = [comp_cost(b, False) for b in branches]
+                    if costs:
+                        worst = max(costs, key=lambda x: x.flops + x.traffic)
+                        total.add(worst)
+                continue
+            if oc in ("fusion", "call", "async-start", "custom-call"):
+                cm = _CALLS_RE.search(op.rest) or (
+                    _OPERAND_RE.search(op.rest) if oc == "call" else None)
+                callee_name = cm.group(1) if cm else None
+                if oc == "fusion" and callee_name:
+                    inner = comp_cost(callee_name, True)
+                    total.flops += inner.flops
+                    # only fusion-boundary bytes touch HBM
+                elif callee_name and oc == "call":
+                    total.add(comp_cost(callee_name, fused))
+                if not fused:
+                    kind_f = (_fusion_kind(callee_name)
+                              if oc == "fusion" else "general")
+                    if kind_f == "convert":
+                        # pure dtype-convert fusion: an XLA:CPU artifact
+                        # around bf16 dots (TPU MXUs consume bf16 natively
+                        # and fold the convert) — no HBM traffic on target
+                        continue
+                    total.traffic += shape_bytes(op.type)
+                    if kind_f == "layout":
+                        # transpose/copy-only fusion: one pass, not
+                        # result+operands
+                        continue
+                    names = _operand_names(op)
+                    sliced = (_fusion_sliced_reads(callee_name)
+                              if oc == "fusion" else {})
+                    for i, nm in enumerate(names):
+                        if i in sliced:
+                            # operand is only dynamic-sliced/gathered inside
+                            # the fusion: HBM reads the windows, not the
+                            # buffer (scan xs / stacked params would
+                            # otherwise be counted in full on every trip)
+                            total.traffic += sliced[i]
+                        else:
+                            total.traffic += shape_bytes(
+                                c.symtab.get(nm, ""))
+                continue
+            if oc == "dot":
+                total.flops += _dot_flops(op, c.symtab)
+                if not fused:
+                    total.traffic += shape_bytes(op.type)
+                    for nm in _operand_names(op):
+                        total.traffic += shape_bytes(c.symtab.get(nm, ""))
+                continue
+            if oc == "convolution":
+                total.flops += _conv_flops(op, c.symtab)
+                if not fused:
+                    total.traffic += shape_bytes(op.type)
+                    for nm in _operand_names(op):
+                        total.traffic += shape_bytes(c.symtab.get(nm, ""))
+                continue
+            if oc in _ELEMENTWISE or oc in ("reduce", "scatter", "gather",
+                                            "select-and-scatter"):
+                total.flops += shape_numel(op.type)
+            if not fused:
+                if oc in ("dynamic-slice", "gather", "slice"):
+                    # reads only the sliced window, not the operand buffer
+                    # (layer-scan param stacks would otherwise be counted
+                    # in full on every trip: 96x overcount for nemotron)
+                    total.traffic += 2 * shape_bytes(op.type)
+                elif oc in ("dynamic-update-slice", "scatter"):
+                    # in-place window write: count the update read + write
+                    names = _operand_names(op)
+                    upd = (shape_bytes(c.symtab.get(names[1], ""))
+                           if len(names) > 1 else shape_bytes(op.type))
+                    total.traffic += 2 * upd
+                else:
+                    total.traffic += shape_bytes(op.type)
+                    for nm in _operand_names(op):
+                        total.traffic += shape_bytes(c.symtab.get(nm, ""))
+        memo[key] = total
+        return total
+
+    def _operand_names(op: Op) -> List[str]:
+        # operands appear before the first '),' — attributes come after
+        paren = op.rest.split(")")[0]
+        return _OPERAND_RE.findall(paren)
+
+    slice_memo: Dict[str, Dict[int, float]] = {}
+    kind_memo: Dict[str, str] = {}
+
+    def _fusion_kind(callee: Optional[str]) -> str:
+        """'convert' (dtype cast only), 'layout' (transpose/copy/reshape
+        only), or 'general'."""
+        if callee is None or callee not in comps:
+            return "general"
+        if callee in kind_memo:
+            return kind_memo[callee]
+        ops_set = {op.opcode for op in comps[callee].ops} - _FREE_OPS
+        if ops_set <= {"convert"}:
+            kind = "convert"
+        elif ops_set <= {"convert", "transpose", "copy", "reshape",
+                         "broadcast", "slice"}:
+            kind = "layout"
+        else:
+            kind = "general"
+        kind_memo[callee] = kind
+        return kind
+
+    def _fusion_sliced_reads(callee: Optional[str]) -> Dict[int, float]:
+        """For each parameter index of a fused computation that is ONLY
+        consumed by windowing ops (dynamic-slice/gather/slice), the bytes
+        those windows actually read."""
+        if callee is None or callee not in comps:
+            return {}
+        if callee in slice_memo:
+            return slice_memo[callee]
+        c = comps[callee]
+        param_of = {}                    # value name -> param index
+        for op in c.ops:
+            if op.opcode == "parameter":
+                mm = re.match(r"\s*(\d+)\)", op.rest)
+                if mm:
+                    param_of[op.name] = int(mm.group(1))
+        uses: Dict[int, List] = {i: [] for i in param_of.values()}
+        ok: Dict[int, bool] = {i: True for i in param_of.values()}
+        for op in c.ops:
+            if op.opcode == "parameter":
+                continue
+            paren = op.rest.split(")")[0]
+            names = _OPERAND_RE.findall(paren)
+            for pos, nm in enumerate(names):
+                if nm in param_of:
+                    i = param_of[nm]
+                    if op.opcode in ("dynamic-slice", "gather", "slice"):
+                        uses[i].append(shape_bytes(op.type))
+                    elif op.opcode == "dynamic-update-slice" and pos == 0:
+                        # window write into the buffer (aliased in place):
+                        # HBM cost = the update window, not the buffer
+                        upd = (c.symtab.get(names[1], "")
+                               if len(names) > 1 else op.type)
+                        uses[i].append(shape_bytes(upd))
+                    else:
+                        ok[i] = False
+        out = {i: float(sum(us)) for i, us in uses.items()
+               if ok.get(i) and us}
+        slice_memo[callee] = out
+        return out
+
+    return comp_cost(entry, False)

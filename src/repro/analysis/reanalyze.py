@@ -1,0 +1,46 @@
+"""Re-run the loop-aware HLO analysis over stored .hlo.zst artifacts and
+refresh the loop_aware block of each dry-run JSON — analyzer improvements
+don't require recompiling the sweep.
+
+    python -m repro.analysis.reanalyze [--save-dir runs/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from .hloparse import analyze
+
+
+def reanalyze(save_dir: str = "runs/dryrun") -> int:
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(save_dir, "*", "*.json"))):
+        hf = jf.replace(".json", ".hlo.zst")
+        if not os.path.exists(hf):
+            continue
+        with open(hf, "rb") as f:
+            text = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+        cost = analyze(text)
+        with open(jf) as f:
+            rec = json.load(f)
+        rec["loop_aware"] = {
+            "flops": cost.flops,
+            "traffic_bytes": cost.traffic,
+            "collective_bytes": cost.collectives,
+            "collective_total": cost.collective_total,
+        }
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--save-dir", default="runs/dryrun")
+    args = ap.parse_args()
+    print(f"reanalyzed {reanalyze(args.save_dir)} records")

@@ -1,0 +1,128 @@
+"""Roofline model: three terms per (arch x shape x mesh) from the dry-run.
+
+    compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM bw)
+    collective term = collective_bytes / (chips x link bw)
+
+All numerators come from the loop-aware HLO analysis (repro.analysis.hloparse)
+of the per-device compiled module, so terms are already per-chip.  Hardware:
+TPU v5e — 197 TFLOP/s bf16 (98.5 f32), 819 GB/s HBM, ~50 GB/s/link ICI.
+
+MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference);
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch waste.  The
+``fraction`` column is ideal_time / max(term)s — the share of roofline the
+compiled program could reach if perfectly overlapped.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Optional
+
+HW = {
+    "peak_flops_bf16": 197e12,
+    "peak_flops_f32": 98.5e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+    "hbm_per_chip": 16e9,
+    "chip_power_w": 215.0,
+}
+
+
+def roofline_terms(rec: dict) -> Optional[dict]:
+    la = rec.get("loop_aware") or {}
+    if "flops" not in la:
+        return None
+    chips = rec["devices"] if rec["mesh"] == "2x16x16" else 256
+    # per-device numbers from the per-device module
+    peak = (HW["peak_flops_bf16"] if rec.get("dtype") == "bfloat16"
+            else HW["peak_flops_f32"])
+    compute_s = la["flops"] / peak
+    memory_s = la["traffic_bytes"] / HW["hbm_bw"]
+    collective_s = la["collective_total"] / HW["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    tokens = (rec["global_batch"] * rec["seq_len"]
+              if rec["kind"] in ("train", "prefill") else rec["global_batch"])
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * rec["n_active"] * tokens
+    hlo_total = la["flops"] * chips
+    ideal_s = model_flops / (chips * peak)
+    if rec["kind"] == "decode":
+        # decode is bandwidth-bound by construction: every active param must
+        # be read once per token — the memory roofline is the honest ideal
+        pbytes = 2 if rec.get("dtype") == "bfloat16" else 4
+        ideal_mem = rec["n_active"] * pbytes / (chips * HW["hbm_bw"])
+        ideal_s = max(ideal_s, ideal_mem)
+    step_s = max(terms.values())
+    return dict(
+        terms,
+        dominant=dominant,
+        model_flops=model_flops,
+        hlo_flops_total=hlo_total,
+        useful_ratio=model_flops / hlo_total if hlo_total else 0.0,
+        ideal_s=ideal_s,
+        step_s=step_s,
+        fraction=ideal_s / step_s if step_s else 0.0,
+        chips=chips,
+        energy_j=step_s * chips * HW["chip_power_w"],
+    )
+
+
+def load_records(save_dir: str = "runs/dryrun", mesh: str = "16x16",
+                 include_variants: bool = False) -> List[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(save_dir, mesh, "*.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        if rec.get("tag") and not include_variants:
+            continue                      # hillclimb variants live in §Perf
+        out.append(rec)
+    return out
+
+
+def markdown_table(save_dir: str = "runs/dryrun", mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+            "dominant | useful ratio | roofline frac | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(save_dir, mesh):
+        t = roofline_terms(rec)
+        if t is None:
+            rows.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | "
+                        f"parse-error | - | - | |")
+            continue
+        note = _note(rec, t)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant'].replace('_s','')} | {t['useful_ratio']:.2f} | "
+            f"{t['fraction']:.3f} | {note} |")
+    return "\n".join(rows)
+
+
+def _note(rec: dict, t: dict) -> str:
+    if t["dominant"] == "collective_s":
+        return "shrink/overlap collectives"
+    if t["dominant"] == "memory_s":
+        if rec["kind"] == "decode":
+            return "decode is HBM-bound by nature (weights+cache read/token)"
+        return "fuse/cast to cut HBM traffic"
+    if t["useful_ratio"] < 0.5:
+        return "recompute/dispatch overhead dominates HLO flops"
+    return "near compute roofline"
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--save-dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(markdown_table(args.save_dir, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro.core — the paper's contribution as composable JAX modules.
+
+Public API:
+  SplitComplex, from_complex, to_complex, from_real
+  fft, ifft, rfft, irfft, fft2, fft3, rfft2, irfft2
+  fft_conv, circular_conv, fourier_mix
+  plan_fft, plan_ifft, FFTPlan
+"""
+from .complexmath import (SplitComplex, from_complex, to_complex, from_real,
+                          add, sub, mul, conj, scale)
+from .fft1d import (fft, ifft, rfft, irfft, fft_axis, dft_naive,
+                    fft_cooley_tukey, fft_stockham, fft_four_step,
+                    fft_bluestein)
+from .fft2d import fft2, fft3, rfft2, irfft2
+from .fftconv import fft_conv, circular_conv
+from .spectral import fourier_mix
+from .plan import FFTPlan, plan_fft, plan_ifft

@@ -1,0 +1,417 @@
+"""1-D FFT algorithms on split-complex data, batched over leading axes.
+
+Algorithm inventory (paper §4 mapped to TPU, see DESIGN.md §2):
+
+- :func:`dft_naive`          O(N^2) dense DFT matmul.  The test oracle and the
+                             MXU leaf operator of the four-step path.
+- :func:`fft_cooley_tukey`   Paper-faithful iterative radix-2 with an explicit
+                             gather ("read reorder") and scatter ("write
+                             reorder") per stage — the paper's *Initial*
+                             design (Fig. 3/4).  ``variant="one_reorder"``
+                             composes stage s's scatter with stage s+1's
+                             gather into a single permutation — the paper's
+                             *Single data copy* optimisation (Fig. 5).
+- :func:`fft_stockham`       Autosort FFT: the permutation is absorbed into
+                             the butterfly write pattern; no gathers at all,
+                             every access is a contiguous block slice.  This
+                             is the TPU-idiomatic end-point of the paper's
+                             reorder-elimination ladder.
+- :func:`fft_four_step`      Bailey four-step: FFT as DFT-matrix matmuls +
+                             pointwise twiddle.  Moves ~all FLOPs to the MXU
+                             (beyond-paper; on the Wormhole FPU==SFPU, on TPU
+                             MXU >> VPU).
+- :func:`fft_bluestein`      Chirp-z for arbitrary N (pads to a power of two).
+- :func:`fft` / :func:`ifft` / :func:`rfft` / :func:`irfft`  dispatching API.
+
+All functions transform the last axis and are jit/vmap/shard_map friendly
+(pure, shape-static).  Twiddle tables are host-precomputed constants
+(:mod:`repro.core.twiddle`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import complexmath as cm
+from .complexmath import SplitComplex
+from . import twiddle as tw
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def _log2(n: int) -> int:
+    return int(n).bit_length() - 1
+
+
+# ---------------------------------------------------------------------------
+# Naive dense DFT (oracle + MXU leaf)
+# ---------------------------------------------------------------------------
+
+def dft_naive(x: SplitComplex, *, inverse: bool = False,
+              precision=None) -> SplitComplex:
+    """X = W_N x as a complex matmul: (..., N) @ (N, N)."""
+    n = x.shape[-1]
+    w = tw.dft_matrix(n, inverse=inverse, dtype=x.dtype)
+    # x (..., N) -> treat as row vectors: X[.., k] = sum_n x[.., n] W[n, k]
+    dot = lambda p, q: jnp.matmul(p, q, precision=precision,
+                                  preferred_element_type=x.dtype)
+    re = dot(x.re, w.re) - dot(x.im, w.im)
+    im = dot(x.re, w.im) + dot(x.im, w.re)
+    out = SplitComplex(re, im)
+    return cm.scale(out, 1.0 / n) if inverse else out
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful iterative radix-2 Cooley-Tukey
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _ct_stage_indices(n: int):
+    """Host-side index plan for every radix-2 stage of a DIT FFT.
+
+    Returns (rev, stages) where each stage is (idx0, idx1, tw_idx, inv_perm):
+      idx0/idx1   natural-order indices of the butterfly pair elements
+                  ("read reorder" gather),
+      tw_idx      index into the size-n twiddle table for each pair,
+      inv_perm    permutation scattering concat(out0, out1) back to natural
+                  order ("write reorder").
+    """
+    rev = tw.bit_reverse_indices(n)
+    half_n = n // 2
+    stages = []
+    for s in range(_log2(n)):
+        half = 1 << s
+        block = half << 1
+        pair = np.arange(half_n, dtype=np.int64)
+        idx0 = (pair // half) * block + (pair % half)
+        idx1 = idx0 + half
+        tw_idx = (pair % half) * (n // block)
+        perm = np.concatenate([idx0, idx1])         # z -> natural position
+        inv_perm = np.argsort(perm)                 # natural -> z position
+        stages.append((idx0, idx1, tw_idx, inv_perm))
+    return rev, tuple(stages)
+
+
+@functools.lru_cache(maxsize=64)
+def _ct_fused_indices(n: int):
+    """Index plan for the *one-reorder-per-step* variant (paper Fig. 5).
+
+    Instead of scattering back to natural order after every stage, the data
+    stays in the stage's paired layout and a single composed permutation
+    carries it to the *next* stage's layout.
+    """
+    rev, stages = _ct_stage_indices(n)
+    g0 = np.concatenate([stages[0][0], stages[0][1]])
+    initial = rev[g0]                                # x -> z_0 (incl. bitrev)
+    hops = []
+    for s in range(len(stages) - 1):
+        _, _, _, inv_perm_s = stages[s]
+        idx0n, idx1n, _, _ = stages[s + 1]
+        g_next = np.concatenate([idx0n, idx1n])
+        hops.append(inv_perm_s[g_next])              # z_s out -> z_{s+1}
+    final = stages[-1][3]                            # z_last out -> natural
+    tw_idx = tuple(st[2] for st in stages)
+    return initial, tuple(hops), final, tw_idx
+
+
+def _take(x: SplitComplex, idx) -> SplitComplex:
+    idx = jnp.asarray(idx)
+    return SplitComplex(jnp.take(x.re, idx, axis=-1),
+                        jnp.take(x.im, idx, axis=-1))
+
+
+def fft_cooley_tukey(x: SplitComplex, *, inverse: bool = False,
+                     variant: str = "two_reorder") -> SplitComplex:
+    """Iterative radix-2 Cooley-Tukey, faithful to the paper's structure.
+
+    variant="two_reorder": gather pairs into contiguous LHS/RHS tiles, run
+    the butterfly, scatter back to natural order — twice-per-step movement,
+    the paper's *Initial* design (Table 1 row 2, Fig. 4).
+
+    variant="one_reorder": stay in the paired layout and apply one composed
+    permutation per stage — the paper's *Single data copy* (Table 1 row 6,
+    Fig. 5).  Identical arithmetic, half the data movement.
+    """
+    n = x.shape[-1]
+    assert _is_pow2(n), f"radix-2 CT needs power-of-two length, got {n}"
+    if n == 1:
+        return x
+    w_table = tw.twiddles(n, inverse=inverse, dtype=x.dtype)
+    half_n = n // 2
+
+    if variant == "two_reorder":
+        rev, stages = _ct_stage_indices(n)
+        z = _take(x, rev)                         # initial bit-reversal read
+        for (idx0, idx1, tw_idx, inv_perm) in stages:
+            lhs = _take(z, idx0)                  # read reorder (gather)
+            rhs = _take(z, idx1)
+            w = _take(w_table, tw_idx)
+            f = cm.mul(rhs, w)                    # f0/f1 of Listing 1.1
+            out0 = cm.add(lhs, f)
+            out1 = cm.sub(lhs, f)
+            cat = SplitComplex(jnp.concatenate([out0.re, out1.re], axis=-1),
+                               jnp.concatenate([out0.im, out1.im], axis=-1))
+            z = _take(cat, inv_perm)              # write reorder (scatter)
+    elif variant == "one_reorder":
+        initial, hops, final, tw_idx = _ct_fused_indices(n)
+        z = _take(x, initial)                     # single fused read reorder
+        n_stages = len(tw_idx)
+        for s in range(n_stages):
+            lhs = SplitComplex(z.re[..., :half_n], z.im[..., :half_n])
+            rhs = SplitComplex(z.re[..., half_n:], z.im[..., half_n:])
+            w = _take(w_table, tw_idx[s])
+            f = cm.mul(rhs, w)
+            out0 = cm.add(lhs, f)
+            out1 = cm.sub(lhs, f)
+            cat = SplitComplex(jnp.concatenate([out0.re, out1.re], axis=-1),
+                               jnp.concatenate([out0.im, out1.im], axis=-1))
+            z = _take(cat, hops[s] if s < n_stages - 1 else final)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    return cm.scale(z, 1.0 / n) if inverse else z
+
+
+# ---------------------------------------------------------------------------
+# Stockham autosort
+# ---------------------------------------------------------------------------
+
+def fft_stockham(x: SplitComplex, *, inverse: bool = False) -> SplitComplex:
+    """Radix-2 DIF Stockham: autosorting, gather-free, contiguous accesses.
+
+    Stage invariant: view the length-N axis as (p, q) of shape
+    (n_cur, stride); butterflies combine the contiguous halves p < m and
+    p >= m (m = n_cur/2) and write interleaved — the permutation the paper
+    pays two explicit copies for is absorbed into the write pattern, and
+    (unlike the paper's fused variant, §4) every access stays contiguous.
+    """
+    n = x.shape[-1]
+    assert _is_pow2(n), f"Stockham needs power-of-two length, got {n}"
+    if n == 1:
+        return x
+    batch = x.shape[:-1]
+    re, im = x.re, x.im
+    n_cur, stride = n, 1
+    while n_cur > 1:
+        m = n_cur // 2
+        re2 = re.reshape(*batch, n_cur, stride)
+        im2 = im.reshape(*batch, n_cur, stride)
+        ar, ai = re2[..., :m, :], im2[..., :m, :]
+        br, bi = re2[..., m:, :], im2[..., m:, :]
+        w = tw.twiddles(n_cur, inverse=inverse, dtype=x.dtype)
+        wr = w.re[:m, None]
+        wi = w.im[:m, None]
+        sr, si = ar - br, ai - bi                  # a - b
+        tr = sr * wr - si * wi                     # (a-b) * w
+        ti = sr * wi + si * wr
+        re = jnp.stack([ar + br, tr], axis=-2).reshape(*batch, n)
+        im = jnp.stack([ai + bi, ti], axis=-2).reshape(*batch, n)
+        n_cur, stride = m, stride * 2
+    out = SplitComplex(re, im)
+    return cm.scale(out, 1.0 / n) if inverse else out
+
+
+# ---------------------------------------------------------------------------
+# Bailey four-step (MXU formulation)
+# ---------------------------------------------------------------------------
+
+def _best_split(n: int) -> int:
+    """Pick n1 | n so that n1 and n/n1 are as close to sqrt(n) as possible,
+    preferring MXU-aligned (multiple of 128) or lane-friendly factors."""
+    best = 1
+    for n1 in range(1, int(np.sqrt(n)) + 1):
+        if n % n1 == 0:
+            best = n1
+    return best
+
+
+def fft_four_step(x: SplitComplex, *, inverse: bool = False,
+                  n1: Optional[int] = None, leaf: int = 256,
+                  precision=None) -> SplitComplex:
+    """Four-step FFT: N = n1*n2; column DFTs (matmul), twiddle, row DFTs
+    (matmul), transpose.  All compute is complex matmul + one pointwise
+    multiply, i.e. MXU-dominated.
+
+    Factors larger than ``leaf`` recurse; leaves use the dense DFT matrix.
+    """
+    n = x.shape[-1]
+    if n <= leaf:
+        return dft_naive(x, inverse=inverse, precision=precision)
+    if n1 is None:
+        n1 = _best_split(n)
+    if n1 == 1 or n1 == n:           # prime beyond leaf: fall back
+        return fft_bluestein(x, inverse=inverse)
+    n2 = n // n1
+
+    a = SplitComplex(x.re.reshape(*x.shape[:-1], n1, n2),
+                     x.im.reshape(*x.shape[:-1], n1, n2))
+
+    # (1) DFT over the n1 axis: move it last, transform, move back.
+    a_t = SplitComplex(jnp.swapaxes(a.re, -1, -2), jnp.swapaxes(a.im, -1, -2))
+    b_t = _fft_len(a_t, n1, inverse=inverse, leaf=leaf, precision=precision)
+    b = SplitComplex(jnp.swapaxes(b_t.re, -1, -2), jnp.swapaxes(b_t.im, -1, -2))
+    if inverse:                       # recursion already divided by n1; undo
+        b = cm.scale(b, float(n1))
+
+    # (2) pointwise twiddle T[k1, n2]
+    t = tw.fourstep_twiddle(n1, n2, inverse=inverse, dtype=x.dtype)
+    c = cm.mul(b, SplitComplex(t.re, t.im))
+
+    # (3) DFT over the n2 axis (already last)
+    d = _fft_len(c, n2, inverse=inverse, leaf=leaf, precision=precision)
+    if inverse:
+        d = cm.scale(d, float(n2))
+
+    # (4) output transpose: X[k2*n1 + k1] = D[k1, k2]
+    out = SplitComplex(
+        jnp.swapaxes(d.re, -1, -2).reshape(*x.shape[:-1], n),
+        jnp.swapaxes(d.im, -1, -2).reshape(*x.shape[:-1], n))
+    return cm.scale(out, 1.0 / n) if inverse else out
+
+
+def _fft_len(x: SplitComplex, n: int, *, inverse: bool, leaf: int,
+             precision) -> SplitComplex:
+    if n <= leaf:
+        return dft_naive(x, inverse=inverse, precision=precision)
+    return fft_four_step(x, inverse=inverse, leaf=leaf, precision=precision)
+
+
+# ---------------------------------------------------------------------------
+# Bluestein chirp-z (arbitrary N)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _bluestein_tables_np(n: int, m: int, sign: float):
+    k = np.arange(n, dtype=np.float64)
+    # n^2 mod 2n keeps the angle argument small (precision guard)
+    ang = sign * np.pi * ((k * k) % (2 * n)) / n
+    a_c, a_s = np.cos(ang), np.sin(ang)
+    b = np.zeros(m, dtype=np.complex128)
+    chirp = np.exp(-1j * ang)                        # conj of a (sign folded)
+    b[:n] = chirp
+    b[m - n + 1:] = chirp[1:][::-1]
+    bf = np.fft.fft(b)
+    return a_c, a_s, bf.real, bf.imag
+
+
+def fft_bluestein(x: SplitComplex, *, inverse: bool = False) -> SplitComplex:
+    """Chirp-z transform: arbitrary-N DFT via one power-of-two convolution."""
+    n = x.shape[-1]
+    m = 1 << int(np.ceil(np.log2(2 * n - 1)))
+    sign = 1.0 if inverse else -1.0
+    a_c, a_s, bf_r, bf_i = _bluestein_tables_np(n, m, sign)
+    a = SplitComplex(jnp.asarray(a_c, x.dtype), jnp.asarray(a_s, x.dtype))
+    bf = SplitComplex(jnp.asarray(bf_r, x.dtype), jnp.asarray(bf_i, x.dtype))
+
+    xa = cm.mul(x, a)
+    pad = [(0, 0)] * (x.re.ndim - 1) + [(0, m - n)]
+    xa_p = SplitComplex(jnp.pad(xa.re, pad), jnp.pad(xa.im, pad))
+    xf = fft_stockham(xa_p)
+    prod = cm.mul(xf, bf)
+    conv = fft_stockham(prod, inverse=True)
+    out = cm.mul(SplitComplex(conv.re[..., :n], conv.im[..., :n]), a)
+    return cm.scale(out, 1.0 / n) if inverse else out
+
+
+# ---------------------------------------------------------------------------
+# Dispatch API
+# ---------------------------------------------------------------------------
+
+_ALGOS = {
+    "naive": dft_naive,
+    "cooley_tukey": functools.partial(fft_cooley_tukey, variant="two_reorder"),
+    "cooley_tukey_fused": functools.partial(fft_cooley_tukey,
+                                            variant="one_reorder"),
+    "stockham": fft_stockham,
+    "four_step": fft_four_step,
+    "bluestein": fft_bluestein,
+}
+
+
+def fft(x: SplitComplex, *, inverse: bool = False,
+        algo: str = "auto") -> SplitComplex:
+    """Forward/inverse DFT along the last axis.
+
+    algo="auto" picks: dense matmul for tiny N, four-step (MXU) for
+    power-of-two N up to 2^20, Stockham beyond, Bluestein for non-pow2.
+    """
+    n = x.shape[-1]
+    if algo == "auto":
+        if not _is_pow2(n):
+            algo = "naive" if n <= 512 else "bluestein"
+        elif n <= 256:
+            algo = "naive"
+        elif n <= (1 << 20):
+            algo = "four_step"
+        else:
+            algo = "stockham"
+    return _ALGOS[algo](x, inverse=inverse)
+
+
+def ifft(x: SplitComplex, *, algo: str = "auto") -> SplitComplex:
+    return fft(x, inverse=True, algo=algo)
+
+
+def fft_axis(x: SplitComplex, axis: int, *, inverse: bool = False,
+             algo: str = "auto") -> SplitComplex:
+    """Transform an arbitrary axis by moving it last and back."""
+    re = jnp.moveaxis(x.re, axis, -1)
+    im = jnp.moveaxis(x.im, axis, -1)
+    y = fft(SplitComplex(re, im), inverse=inverse, algo=algo)
+    return SplitComplex(jnp.moveaxis(y.re, -1, axis),
+                        jnp.moveaxis(y.im, -1, axis))
+
+
+# ---------------------------------------------------------------------------
+# Real-input transforms
+# ---------------------------------------------------------------------------
+
+def rfft(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
+    """Real-input FFT via the packed half-size complex transform.
+
+    Packs even/odd samples into one complex sequence of length N/2 — halves
+    both FLOPs and data movement versus a zero-imaginary full FFT
+    (beyond-paper: the paper always carries a full imaginary plane).
+    Returns the (..., N/2+1) half spectrum.
+    """
+    n = x.shape[-1]
+    assert n % 2 == 0, "rfft requires even length"
+    h = n // 2
+    z = SplitComplex(x[..., 0::2], x[..., 1::2])
+    zf = fft(z, algo=algo)                            # (..., h)
+    # untangle: Xe[k] = (Z[k] + conj(Z[h-k]))/2 ; Xo[k] = -i(Z[k]-conj(Z[h-k]))/2
+    idx = (-jnp.arange(h)) % h                        # Z[h-k] with wrap
+    zr_f = jnp.take(zf.re, idx, axis=-1)
+    zi_f = jnp.take(zf.im, idx, axis=-1)
+    xe = SplitComplex((zf.re + zr_f) * 0.5, (zf.im - zi_f) * 0.5)
+    xo = SplitComplex((zf.im + zi_f) * 0.5, (zr_f - zf.re) * 0.5)
+    w = tw.twiddles(n, dtype=x.dtype)                 # e^{-2pi i k/N}
+    wh = SplitComplex(w.re[:h], w.im[:h])
+    xo_t = cm.mul(xo, wh)
+    full = cm.add(xe, xo_t)                           # k = 0..h-1
+    # k = h term: X[h] = Xe[0] - Xo[0]  (twiddle at k=h is -1)
+    last = SplitComplex(xe.re[..., :1] - xo.re[..., :1],
+                        xe.im[..., :1] - xo.im[..., :1])
+    return SplitComplex(jnp.concatenate([full.re, last.re], axis=-1),
+                        jnp.concatenate([full.im, last.im], axis=-1))
+
+
+def irfft(xf: SplitComplex, n: Optional[int] = None, *,
+          algo: str = "auto") -> jnp.ndarray:
+    """Inverse real FFT from the (..., N/2+1) half spectrum."""
+    if n is None:
+        n = 2 * (xf.shape[-1] - 1)
+    # Hermitian-extend then complex ifft; take the real plane.
+    body_r = xf.re[..., 1:-1]
+    body_i = xf.im[..., 1:-1]
+    full = SplitComplex(
+        jnp.concatenate([xf.re, body_r[..., ::-1]], axis=-1),
+        jnp.concatenate([xf.im, -body_i[..., ::-1]], axis=-1))
+    out = fft(full, inverse=True, algo=algo)
+    return out.re

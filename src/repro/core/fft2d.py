@@ -1,0 +1,58 @@
+"""Single-device 2-D / 3-D FFTs (the paper's Section 5 workload, one chip).
+
+Row-column decomposition: FFT the last axis, transpose, FFT again.  The
+explicit transpose mirrors the paper's global transpose between the two 1-D
+passes; on one device XLA lowers it to an in-HBM relayout.  The distributed
+version (all_to_all pencil transpose) lives in :mod:`repro.dist.pencil`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import complexmath as cm
+from .complexmath import SplitComplex
+from . import fft1d
+
+
+def _swap(x: SplitComplex, a: int, b: int) -> SplitComplex:
+    return SplitComplex(jnp.swapaxes(x.re, a, b), jnp.swapaxes(x.im, a, b))
+
+
+def fft2(x: SplitComplex, *, inverse: bool = False,
+         algo: str = "auto") -> SplitComplex:
+    """2-D FFT over the last two axes: rows, transpose, rows, transpose."""
+    y = fft1d.fft(x, inverse=inverse, algo=algo)       # FFT each row
+    y = _swap(y, -1, -2)                               # global transpose
+    y = fft1d.fft(y, inverse=inverse, algo=algo)       # FFT each column
+    return _swap(y, -1, -2)
+
+
+def fft3(x: SplitComplex, *, inverse: bool = False,
+         algo: str = "auto") -> SplitComplex:
+    """3-D FFT over the last three axes."""
+    y = fft1d.fft(x, inverse=inverse, algo=algo)
+    y = _swap(y, -1, -2)
+    y = fft1d.fft(y, inverse=inverse, algo=algo)
+    y = _swap(y, -1, -2)
+    y = _swap(y, -1, -3)
+    y = fft1d.fft(y, inverse=inverse, algo=algo)
+    return _swap(y, -1, -3)
+
+
+def rfft2(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
+    """Real-input 2-D FFT: rfft rows (half spectrum), full FFT columns.
+
+    Beyond-paper: halves the row-pass FLOPs and — in the distributed
+    version — the transpose all_to_all bytes.
+    """
+    y = fft1d.rfft(x, algo=algo)                       # (..., H, W/2+1)
+    y = _swap(y, -1, -2)
+    y = fft1d.fft(y, algo=algo)
+    return _swap(y, -1, -2)
+
+
+def irfft2(xf: SplitComplex, *, algo: str = "auto") -> jnp.ndarray:
+    y = _swap(xf, -1, -2)
+    y = fft1d.ifft(y, algo=algo)
+    y = _swap(y, -1, -2)
+    return fft1d.irfft(y, algo=algo)

@@ -1,0 +1,47 @@
+"""FFT-based long convolution (O(L log L)) on real signals.
+
+The LM-integration point of the paper's technique (DESIGN.md §4): SSM/hybrid
+mixers evaluate their long-convolution view through the FFT library instead
+of a direct O(L*K) conv.  Built entirely from :mod:`repro.core.fft1d`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import complexmath as cm
+from . import fft1d
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << int(np.ceil(np.log2(max(n, 1))))
+
+
+def fft_conv(x: jnp.ndarray, k: jnp.ndarray, *, causal: bool = True,
+             algo: str = "auto") -> jnp.ndarray:
+    """Convolve signal x (..., L) with kernel k (..., K) via rfft.
+
+    causal=True returns y[t] = sum_{s<=t} x[s] k[t-s] truncated to length L
+    (the long-conv form used by SSM token mixers).
+    """
+    L = x.shape[-1]
+    K = k.shape[-1]
+    m = _next_pow2(L + K - 1)
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, m - L)])
+    kp = jnp.pad(k, [(0, 0)] * (k.ndim - 1) + [(0, m - K)])
+    xf = fft1d.rfft(xp, algo=algo)
+    kf = fft1d.rfft(kp, algo=algo)
+    yf = cm.mul(xf, kf)
+    y = fft1d.irfft(yf, m, algo=algo)
+    if causal:
+        return y[..., :L]
+    return y[..., : L + K - 1]
+
+
+def circular_conv(x: jnp.ndarray, k: jnp.ndarray, *,
+                  algo: str = "auto") -> jnp.ndarray:
+    """Circular convolution of equal-length real signals."""
+    assert x.shape[-1] == k.shape[-1]
+    xf = fft1d.rfft(x, algo=algo)
+    kf = fft1d.rfft(k, algo=algo)
+    return fft1d.irfft(cm.mul(xf, kf), x.shape[-1], algo=algo)

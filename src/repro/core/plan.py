@@ -1,0 +1,62 @@
+"""FFTW-style plans: choose an algorithm/kernel once, apply many times.
+
+A :class:`FFTPlan` captures (length, dtype, direction, backend) and exposes a
+jit-friendly ``__call__``.  ``backend="jnp"`` uses the pure-JAX algorithms in
+:mod:`repro.core.fft1d`; ``backend="pallas"`` dispatches to the TPU kernels in
+:mod:`repro.kernels.ops` (interpret-mode on CPU).  Mirrors how the paper bakes
+per-size decisions (chunking, reorder plan, twiddles) at initialisation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .complexmath import SplitComplex
+from . import fft1d
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTPlan:
+    n: int
+    inverse: bool = False
+    algo: str = "auto"            # resolved at construction
+    backend: str = "jnp"          # "jnp" | "pallas"
+
+    @staticmethod
+    def create(n: int, *, inverse: bool = False, algo: str = "auto",
+               backend: str = "jnp") -> "FFTPlan":
+        if algo == "auto":
+            if not _is_pow2(n):
+                algo = "naive" if n <= 512 else "bluestein"
+            elif n <= 256:
+                algo = "naive"
+            elif n <= (1 << 20):
+                algo = "four_step"
+            else:
+                algo = "stockham"
+        if backend == "pallas" and algo in ("naive", "bluestein"):
+            backend = "jnp"       # no kernel for these paths
+        return FFTPlan(n=n, inverse=inverse, algo=algo, backend=backend)
+
+    def __call__(self, x: SplitComplex) -> SplitComplex:
+        assert x.shape[-1] == self.n, (x.shape, self.n)
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops
+            if self.algo == "four_step":
+                return kops.fft_fourstep(x, inverse=self.inverse)
+            return kops.fft_stockham(x, inverse=self.inverse)
+        return fft1d.fft(x, inverse=self.inverse, algo=self.algo)
+
+
+def plan_fft(n: int, **kw) -> FFTPlan:
+    return FFTPlan.create(n, **kw)
+
+
+def plan_ifft(n: int, **kw) -> FFTPlan:
+    return FFTPlan.create(n, inverse=True, **kw)

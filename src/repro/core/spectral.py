@@ -1,0 +1,24 @@
+"""FNet-style Fourier token mixing — the transformer integration point.
+
+``fourier_mix`` replaces self-attention with Re(FFT_seq(FFT_model(x))): a
+parameter-free O(S log S) token mixer (Lee-Thorp et al., FNet) built on this
+repo's FFT core.  Any transformer config can select it via
+``token_mixing="fourier"`` (DESIGN.md §4); the ``fnet_demo`` example config
+uses it end-to-end.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .complexmath import SplitComplex, from_real
+from . import fft1d
+
+
+def fourier_mix(x: jnp.ndarray, *, algo: str = "auto") -> jnp.ndarray:
+    """x: (..., seq, d_model) -> Re(FFT over d_model then over seq)."""
+    z = from_real(x)
+    z = fft1d.fft(z, algo=algo)                    # over d_model (last axis)
+    zr = jnp.swapaxes(z.re, -1, -2)
+    zi = jnp.swapaxes(z.im, -1, -2)
+    z = fft1d.fft(SplitComplex(zr, zi), algo=algo)  # over seq
+    return jnp.swapaxes(z.re, -1, -2)

@@ -1,0 +1,73 @@
+"""Twiddle-factor tables.
+
+The paper computes twiddles once at initialisation on the compute engine and
+keeps them resident in SRAM (Section 4).  We do the same: tables are built in
+float64 on the host (numpy) for accuracy, cast to the working dtype, and
+treated as constants by XLA (hoisted out of the step, resident in HBM/VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from .complexmath import SplitComplex
+
+
+@functools.lru_cache(maxsize=128)
+def _twiddle_np(n: int, sign: float) -> tuple:
+    k = np.arange(n, dtype=np.float64)
+    ang = sign * 2.0 * np.pi * k / n
+    return np.cos(ang), np.sin(ang)
+
+
+def twiddles(n: int, *, inverse: bool = False, dtype=jnp.float32) -> SplitComplex:
+    """``exp(sign * 2*pi*i * k / n)`` for k in [0, n): the stage-n table."""
+    sign = 1.0 if inverse else -1.0
+    c, s = _twiddle_np(n, sign)
+    return SplitComplex(jnp.asarray(c, dtype=dtype), jnp.asarray(s, dtype=dtype))
+
+
+@functools.lru_cache(maxsize=64)
+def _dft_matrix_np(n: int, sign: float) -> tuple:
+    jk = np.outer(np.arange(n, dtype=np.float64), np.arange(n, dtype=np.float64))
+    ang = sign * 2.0 * np.pi * jk / n
+    return np.cos(ang), np.sin(ang)
+
+
+def dft_matrix(n: int, *, inverse: bool = False, dtype=jnp.float32) -> SplitComplex:
+    """Dense DFT matrix W[j, k] = exp(sign*2*pi*i*j*k/n).
+
+    The MXU leaf operator for the four-step path.  W is symmetric, so row
+    and column transforms use the same table.
+    """
+    sign = 1.0 if inverse else -1.0
+    c, s = _dft_matrix_np(n, sign)
+    return SplitComplex(jnp.asarray(c, dtype=dtype), jnp.asarray(s, dtype=dtype))
+
+
+@functools.lru_cache(maxsize=64)
+def _fourstep_twiddle_np(n1: int, n2: int, sign: float) -> tuple:
+    k1 = np.arange(n1, dtype=np.float64)[:, None]
+    n2r = np.arange(n2, dtype=np.float64)[None, :]
+    ang = sign * 2.0 * np.pi * (k1 * n2r) / (n1 * n2)
+    return np.cos(ang), np.sin(ang)
+
+
+def fourstep_twiddle(n1: int, n2: int, *, inverse: bool = False,
+                     dtype=jnp.float32) -> SplitComplex:
+    """Inter-factor twiddle T[k1, n2] = exp(sign*2*pi*i*k1*n2/(n1*n2))."""
+    sign = 1.0 if inverse else -1.0
+    c, s = _fourstep_twiddle_np(n1, n2, sign)
+    return SplitComplex(jnp.asarray(c, dtype=dtype), jnp.asarray(s, dtype=dtype))
+
+
+def bit_reverse_indices(n: int) -> np.ndarray:
+    """Bit-reversal permutation for power-of-two n (host-side constant)."""
+    bits = int(n).bit_length() - 1
+    idx = np.arange(n, dtype=np.int64)
+    rev = np.zeros_like(idx)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev

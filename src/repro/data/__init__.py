@@ -1,0 +1,2 @@
+"""repro.data — deterministic, checkpointable, host-sharded data pipeline."""
+from .pipeline import DataConfig, SyntheticLM, make_batch_specs

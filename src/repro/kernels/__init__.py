@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the FFT hot path (validated with interpret=True).
+
+fft_stockham — VMEM-resident autosort FFT (all stages, zero reorders)
+fft_fourstep — MXU DFT-matmul four-step FFT
+fft_stage    — paper-faithful per-stage butterfly chain (baseline)
+ops          — jit'd wrappers; ref — jnp.fft oracles
+"""

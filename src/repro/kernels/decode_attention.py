@@ -1,0 +1,103 @@
+"""Flash-decode Pallas kernel: one-token GQA attention against a KV cache.
+
+The §Perf decode iterations (EXPERIMENTS.md D1/D2) identified the XLA-lowered
+decode attention as copy-bound: the cache is re-materialised (and on CPU,
+upcast) around the dot ops.  On TPU the fix is exactly this kernel: the
+cache streams HBM -> VMEM once per token in (chunk) tiles, the online
+softmax state (m, l, acc) lives in VMEM across the sequential chunk grid,
+and nothing is ever written back but the (B, H, D) output.
+
+Grid: (batch_tiles, kv_chunks) — the chunk dim is the minor (sequential)
+axis, so accumulator blocks are revisited in order (the standard TPU
+accumulation pattern).  Masking is positional (padding slots carry -1;
+sliding windows are a position predicate), identical semantics to
+repro.models.layers._attend_chunked / repro.models.flash.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref,
+                   acc_ref, m_ref, l_ref, *, window, kv_heads, q_heads):
+    ci = pl.program_id(1)
+    group = q_heads // kv_heads
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)                  # (bb, H, D)
+    k = k_ref[...].astype(jnp.float32)                  # (bb, C, KV, D)
+    v = v_ref[...].astype(jnp.float32)
+    pos = pos_ref[...]                                  # (bb, C)
+    qpos = qpos_ref[...]                                # (bb,)
+
+    bb, h, d = q.shape
+    c = k.shape[1]
+    qg = q.reshape(bb, kv_heads, group, d) / np.sqrt(d)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k,
+                   preferred_element_type=jnp.float32)  # (bb, KV, G, C)
+    mask = (pos >= 0) & (pos <= qpos[:, None])
+    if window is not None:
+        mask &= pos > (qpos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (bb, KV, G)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+    m_ref[...] = m_new
+    acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                    + jnp.einsum("bkgc,bckd->bkgd", p, v,
+                                 preferred_element_type=jnp.float32))
+
+
+def decode_attention_pallas(q, k_cache, v_cache, kv_pos, q_pos, *,
+                            window=None, chunk: int = 512,
+                            block_batch: int = 8,
+                            interpret: bool = True):
+    """q: (B, H, D); caches: (B, S, KV, D); kv_pos: (B, S) int32 (-1 = empty);
+    q_pos: (B,).  Returns (B, H, D) in q.dtype."""
+    b, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    bb = min(block_batch, b)
+    assert b % bb == 0
+    group = h // kvh
+
+    grid = (b // bb, nc)
+    q_spec = pl.BlockSpec((bb, h, d), lambda i, j: (i, 0, 0))
+    kv_spec = pl.BlockSpec((bb, c, kvh, d), lambda i, j: (i, j, 0, 0))
+    pos_spec = pl.BlockSpec((bb, c), lambda i, j: (i, j))
+    qpos_spec = pl.BlockSpec((bb,), lambda i, j: (i,))
+    acc_spec = pl.BlockSpec((bb, kvh, group, d), lambda i, j: (i, 0, 0, 0))
+    ml_spec = pl.BlockSpec((bb, kvh, group), lambda i, j: (i, 0, 0))
+
+    kernel = functools.partial(_decode_kernel, window=window,
+                               kv_heads=kvh, q_heads=h)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[qpos_spec, q_spec, kv_spec, kv_spec, pos_spec],
+        out_specs=[acc_spec, ml_spec, ml_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, kvh, group, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, kvh, group), jnp.float32),
+                   jax.ShapeDtypeStruct((b, kvh, group), jnp.float32)],
+        interpret=interpret,
+    )(q_pos, q, k_cache, v_cache, kv_pos)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Single radix-2 butterfly stage Pallas kernel — the paper's per-step design.
+
+The paper's *Initial* implementation runs one stage at a time: gather the
+stage's LHS/RHS pairs into contiguous tiles (read reorder), butterfly, then
+scatter back to natural order (write reorder), with an SRAM round-trip per
+stage.  This kernel reproduces that structure on TPU — one ``pallas_call``
+per stage, gather/scatter permutations done in-kernel — and exists as the
+measured *baseline* of the reorder-elimination ladder (benchmarks table 1).
+:mod:`repro.kernels.fft_stockham` is the end state the ladder reaches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.complexmath import SplitComplex
+from repro.core import twiddle as tw
+from repro.core.fft1d import _ct_stage_indices, _log2
+
+
+def _stage_kernel(idx0_ref, idx1_ref, inv_ref, wr_ref, wi_ref,
+                  zre_ref, zim_ref, ore_ref, oim_ref, *, n: int):
+    h = n // 2
+    re = zre_ref[...]
+    im = zim_ref[...]
+    idx0 = idx0_ref[...]
+    idx1 = idx1_ref[...]
+    # read reorder: gather pairs into contiguous LHS/RHS tiles
+    lr = jnp.take(re, idx0, axis=1)
+    li = jnp.take(im, idx0, axis=1)
+    rr = jnp.take(re, idx1, axis=1)
+    ri = jnp.take(im, idx1, axis=1)
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    fr = rr * wr - ri * wi                       # f0 (Listing 1.1)
+    fi = rr * wi + ri * wr                       # f1
+    o0r, o0i = lr + fr, li + fi
+    o1r, o1i = lr - fr, li - fi
+    cat_r = jnp.concatenate([o0r, o1r], axis=1)
+    cat_i = jnp.concatenate([o0i, o1i], axis=1)
+    inv = inv_ref[...]
+    # write reorder: scatter back to natural order
+    ore_ref[...] = jnp.take(cat_r, inv, axis=1)
+    oim_ref[...] = jnp.take(cat_i, inv, axis=1)
+
+
+def fft_stage_pallas(z: SplitComplex, stage: int, *, inverse: bool = False,
+                     block_batch: int = 8,
+                     interpret: bool = True) -> SplitComplex:
+    """Apply butterfly stage ``stage`` to bit-reversed-order data (batch, n)."""
+    batch, n = z.re.shape
+    h = n // 2
+    bb = min(block_batch, batch)
+    assert batch % bb == 0
+    _, stages = _ct_stage_indices(n)
+    idx0, idx1, tw_idx, inv_perm = stages[stage]
+    c, s = tw._twiddle_np(n, 1.0 if inverse else -1.0)   # host-side table
+    wr = jnp.asarray(c[tw_idx], z.dtype)
+    wi = jnp.asarray(s[tw_idx], z.dtype)
+
+    grid = (batch // bb,)
+    data_spec = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    half_spec = pl.BlockSpec((h,), lambda i: (0,))
+    full_spec = pl.BlockSpec((n,), lambda i: (0,))
+    kernel = functools.partial(_stage_kernel, n=n)
+    out_shape = [jax.ShapeDtypeStruct((batch, n), z.dtype)] * 2
+    ore, oim = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[half_spec, half_spec, full_spec, half_spec, half_spec,
+                  data_spec, data_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray(idx0, jnp.int32), jnp.asarray(idx1, jnp.int32),
+      jnp.asarray(inv_perm, jnp.int32), wr, wi, z.re, z.im)
+    return SplitComplex(ore, oim)
+
+
+def fft_staged_pallas(x: SplitComplex, *, inverse: bool = False,
+                      block_batch: int = 8,
+                      interpret: bool = True) -> SplitComplex:
+    """Full FFT as log2(N) chained single-stage kernels (paper's Initial)."""
+    batch, n = x.re.shape
+    rev = jnp.asarray(tw.bit_reverse_indices(n))
+    z = SplitComplex(jnp.take(x.re, rev, axis=1), jnp.take(x.im, rev, axis=1))
+    for s in range(_log2(n)):
+        z = fft_stage_pallas(z, s, inverse=inverse, block_batch=block_batch,
+                             interpret=interpret)
+    if inverse:
+        z = SplitComplex(z.re / n, z.im / n)
+    return z

@@ -1,0 +1,117 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+Handle leading-batch flattening, batch padding to the block size, dtype
+plumbing, and the interpret-mode switch (interpret=True on CPU — the kernels
+target TPU; see EXAMPLE.md).  The public entry points mirror
+:mod:`repro.core.fft1d` so :class:`repro.core.plan.FFTPlan` can swap backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.complexmath import SplitComplex
+from . import fft_stockham as _stockham
+from . import fft_fourstep as _fourstep
+from . import fft_stage as _stage
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flatten(x: SplitComplex):
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    batch = 1
+    for d in lead:
+        batch *= d
+    return SplitComplex(x.re.reshape(batch, n), x.im.reshape(batch, n)), lead
+
+
+def _unflatten(x: SplitComplex, lead) -> SplitComplex:
+    n = x.shape[-1]
+    return SplitComplex(x.re.reshape(*lead, n), x.im.reshape(*lead, n))
+
+
+def _pad_batch(x: SplitComplex, bb: int):
+    batch = x.shape[0]
+    pad = (-batch) % bb
+    if pad:
+        x = SplitComplex(jnp.pad(x.re, ((0, pad), (0, 0))),
+                         jnp.pad(x.im, ((0, pad), (0, 0))))
+    return x, batch
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_batch",
+                                             "interpret"))
+def fft_stockham(x: SplitComplex, *, inverse: bool = False,
+                 block_batch: int = 8, interpret: bool = None) -> SplitComplex:
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat, lead = _flatten(x)
+    padded, batch = _pad_batch(flat, block_batch)
+    out = _stockham.fft_stockham_pallas(padded, inverse=inverse,
+                                        block_batch=block_batch,
+                                        interpret=interpret)
+    out = SplitComplex(out.re[:batch], out.im[:batch])
+    return _unflatten(out, lead)
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_batch", "n1",
+                                             "interpret"))
+def fft_fourstep(x: SplitComplex, *, inverse: bool = False,
+                 block_batch: int = 4, n1: int = None,
+                 interpret: bool = None) -> SplitComplex:
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat, lead = _flatten(x)
+    padded, batch = _pad_batch(flat, block_batch)
+    out = _fourstep.fft_fourstep_pallas(padded, inverse=inverse,
+                                        block_batch=block_batch, n1=n1,
+                                        interpret=interpret)
+    out = SplitComplex(out.re[:batch], out.im[:batch])
+    return _unflatten(out, lead)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "chunk",
+                                             "block_batch", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_pos, q_pos, *, window=None,
+                     chunk: int = 512, block_batch: int = 8,
+                     interpret: bool = None):
+    """Flash-decode kernel (see kernels.decode_attention): the TPU fix for
+    the copy-bound XLA decode attention measured in EXPERIMENTS.md §Perf D2."""
+    from . import decode_attention as _da
+    if interpret is None:
+        interpret = not _on_tpu()
+    b = q.shape[0]
+    bb = min(block_batch, b)
+    pad = (-b) % bb
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        k_cache = jnp.pad(k_cache, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, pad), (0, 0)), constant_values=-1)
+        q_pos = jnp.pad(q_pos, ((0, pad),))
+    out = _da.decode_attention_pallas(q, k_cache, v_cache, kv_pos, q_pos,
+                                      window=window, chunk=chunk,
+                                      block_batch=bb, interpret=interpret)
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_batch",
+                                             "interpret"))
+def fft_staged(x: SplitComplex, *, inverse: bool = False,
+               block_batch: int = 8, interpret: bool = None) -> SplitComplex:
+    """Paper-faithful per-stage kernel chain (the Table 1 baseline)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat, lead = _flatten(x)
+    padded, batch = _pad_batch(flat, block_batch)
+    out = _stage.fft_staged_pallas(padded, inverse=inverse,
+                                   block_batch=block_batch,
+                                   interpret=interpret)
+    out = SplitComplex(out.re[:batch], out.im[:batch])
+    return _unflatten(out, lead)

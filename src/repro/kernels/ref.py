@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Ground truth is ``jnp.fft`` (an implementation wholly independent of
+``repro.core``), exposed in split-complex form so tests can
+``assert_allclose`` kernel outputs directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.complexmath import SplitComplex
+
+
+def fft_ref(x: SplitComplex, *, inverse: bool = False) -> SplitComplex:
+    z = x.re.astype(jnp.complex64) + 1j * x.im.astype(jnp.complex64)
+    out = jnp.fft.ifft(z, axis=-1) if inverse else jnp.fft.fft(z, axis=-1)
+    return SplitComplex(jnp.real(out).astype(x.dtype),
+                        jnp.imag(out).astype(x.dtype))
+
+
+def fft2_ref(x: SplitComplex, *, inverse: bool = False) -> SplitComplex:
+    z = x.re.astype(jnp.complex64) + 1j * x.im.astype(jnp.complex64)
+    out = jnp.fft.ifft2(z) if inverse else jnp.fft.fft2(z)
+    return SplitComplex(jnp.real(out).astype(x.dtype),
+                        jnp.imag(out).astype(x.dtype))
+
+
+def rfft_ref(x: jnp.ndarray) -> SplitComplex:
+    out = jnp.fft.rfft(x, axis=-1)
+    return SplitComplex(jnp.real(out).astype(x.dtype),
+                        jnp.imag(out).astype(x.dtype))
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_pos, q_pos, *, window=None):
+    """Dense one-token GQA attention oracle.  q: (B,H,D); caches
+    (B,S,KV,D); positions as in kernels.decode_attention."""
+    import numpy as np
+    b, h, d = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q.astype(jnp.float32).reshape(b, kvh, g, d) / np.sqrt(d)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache.astype(jnp.float32))
+    mask = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window is not None:
+        mask &= kv_pos > (q_pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

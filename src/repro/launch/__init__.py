@@ -1,0 +1,1 @@
+"""repro.launch — production mesh, sharding rules, dry-run, drivers."""

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks the
+# host device count at first init.  All other imports are deferred into
+# functions for the same reason (and so tests can import helpers under a
+# 1-device runtime).
+
+import argparse
+import json
+import re
+import time
+
+
+HW = {  # TPU v5e per-chip constants (roofline §EXPERIMENTS.md)
+    "peak_flops_bf16": 197e12,      # FLOP/s
+    "peak_flops_f32": 98.5e12,
+    "hbm_bw": 819e9,                # B/s
+    "ici_bw": 50e9,                 # B/s per link (per-chip assumed)
+    "hbm_per_chip": 16e9,           # bytes
+    "board_power_w": 215.0,         # chip TDP-ish, for the energy model
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-payload bytes of every collective op in optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m:
+            out[m.group(2)] += _shape_bytes(m.group(1))
+            out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, overrides=None,
+               microbatches=None):
+    """Returns (fn, abstract_args, in_shardings, meta) for one cell.
+
+    overrides: dict of ModelConfig field replacements (hillclimb variants);
+    microbatches: grad-accumulation override for train cells.
+    """
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.data.pipeline import make_batch_specs
+    from repro.models import model as M
+    from repro.serve import engine as E
+    from repro.train import optimizer as opt_lib
+    from repro.train.train_step import make_train_step, abstract_opt_state
+    from . import sharding as sh
+
+    cfg = C.get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = C.SHAPES[shape_name]
+    ap = M.abstract_params(cfg)
+    pshard = sh.param_shardings(cfg, mesh, ap)
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "n_params": M.param_count(ap),
+        "n_active": M.active_param_count(cfg, ap),
+        "profile": sh.profile_for(cfg),
+        "dtype": cfg.dtype,
+    }
+
+    if cell.kind == "train":
+        # memory ladder for the 100B+ configs: bf16 optimizer moments
+        # (halves optimizer HBM) and 4-way microbatch accumulation
+        # (quarters live activation memory) — see EXPERIMENTS.md §Dry-run
+        big = meta["n_params"] > 5e10
+        moments = "bfloat16" if big else "float32"
+        micro = microbatches if microbatches else (4 if big else 1)
+        meta["microbatches"] = micro
+        ocfg = opt_lib.AdamWConfig(moments_dtype=moments)
+        ao = abstract_opt_state(cfg, ocfg, ap)
+        oshard = sh.opt_shardings(cfg, mesh, ao, ap)
+        bspec = make_batch_specs(cfg, cell.seq_len, cell.global_batch)
+        bshard = sh.batch_shardings(cfg, mesh, bspec)
+        fn = make_train_step(cfg, ocfg, microbatches=micro)
+        return fn, (ap, ao, bspec), (pshard, oshard, bshard), meta
+
+    if cell.kind == "prefill":
+        bspec = make_batch_specs(cfg, cell.seq_len, cell.global_batch)
+        bspec.pop("labels")
+        bshard = sh.batch_shardings(cfg, mesh, bspec)
+        acache = jax.eval_shape(
+            lambda: M.init_cache(cfg, cell.global_batch, cell.seq_len,
+                                 jnp.bfloat16))
+        cshard = sh.cache_shardings(cfg, mesh, acache, cell.global_batch)
+        fn = E.prefill_fn(cfg)
+        return fn, (ap, bspec, acache), (pshard, bshard, cshard), meta
+
+    # decode: one new token against a seq_len-deep cache.  KV caches are
+    # bf16 regardless of model dtype (standard serving practice — qwen1.5's
+    # f32 32k cache measured 200 GiB/dev before this).
+    import jax.numpy as jnp
+    b = cell.global_batch
+    acache = jax.eval_shape(
+        lambda: M.init_cache(cfg, b, cell.seq_len, jnp.bfloat16))
+    cshard = sh.cache_shardings(cfg, mesh, acache, b)
+    toks = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tshard = sh.batch_shardings(cfg, mesh, toks)
+    fn = E.decode_fn(cfg)
+    return fn, (ap, toks, acache, pos), (pshard, tshard, cshard, tshard), meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             save_dir: str = "runs/dryrun", verbose: bool = True,
+             overrides=None, microbatches=None, tag: str = "") -> dict:
+    import jax
+    from repro.models import actsharding
+    from . import mesh as mesh_lib
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    fn, args, in_shardings, meta = build_cell(arch, shape_name, mesh,
+                                              overrides=overrides,
+                                              microbatches=microbatches)
+    meta["mesh"] = mesh_name
+    if tag:
+        meta["tag"] = tag
+        shape_name = f"{shape_name}__{tag}"
+    meta["devices"] = int(len(jax.devices()))
+    batch_axes = mesh_lib.data_axes(mesh)
+    # decode with unshardable batch (long_500k, B=1): no batch pinning —
+    # the cache SP sharding governs instead
+    cell_batch = meta["global_batch"]
+    dsize = 1
+    for a in batch_axes:
+        dsize *= mesh.shape[a]
+    pin = cell_batch % dsize == 0 and cell_batch >= dsize
+
+    t0 = time.time()
+    import contextlib
+    ctx = (actsharding.activation_spec(mesh, batch_axes, "model")
+           if pin else contextlib.nullcontext())
+    with mesh, ctx:
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rec = dict(meta, lower_s=round(t_lower, 2), compile_s=round(t_compile, 2))
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as ex:                                  # pragma: no cover
+        rec["memory"] = {"error": str(ex)}
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       ("flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as ex:                                  # pragma: no cover
+        rec["cost"] = {"error": str(ex)}
+    hlo_text = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo_text)     # text-static payload
+    try:
+        from repro.analysis.hloparse import analyze
+        cost = analyze(hlo_text)
+        rec["loop_aware"] = {                           # per-device, loop-exact
+            "flops": cost.flops,
+            "traffic_bytes": cost.traffic,
+            "collective_bytes": cost.collectives,
+            "collective_total": cost.collective_total,
+        }
+    except Exception as ex:                             # pragma: no cover
+        rec["loop_aware"] = {"error": repr(ex)[:300]}
+
+    os.makedirs(os.path.join(save_dir, mesh_name), exist_ok=True)
+    out = os.path.join(save_dir, mesh_name, f"{arch}__{shape_name}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    try:                       # keep the HLO so the analyzer can be re-run
+        import zstandard
+        with open(out.replace(".json", ".hlo.zst"), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(
+                hlo_text.encode()))
+    except Exception:
+        pass
+    if verbose:
+        flops = rec["cost"].get("flops", 0)
+        print(f"[dryrun] {mesh_name} {arch} {shape_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops/dev {flops:.3e} "
+              f"coll {rec['collectives']['total']/2**30:.2f} GiB "
+              f"-> {out}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="every runnable (arch x shape) cell")
+    ap.add_argument("--save-dir", default="runs/dryrun")
+    ap.add_argument("--set", nargs="*", default=[], metavar="KEY=VALUE",
+                    help="ModelConfig overrides for hillclimb variants")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--tag", default="", help="variant tag for the artifact")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    import repro.configs as C
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = C.all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, C.SHAPES[args.shape])]
+
+    failures = []
+    for arch, cell in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, cell.shape, multi_pod=mp,
+                         save_dir=args.save_dir,
+                         overrides=overrides or None,
+                         microbatches=args.microbatches, tag=args.tag)
+            except Exception as ex:
+                failures.append((arch, cell.shape, mp, repr(ex)[:200]))
+                print(f"[dryrun] FAIL {arch} {cell.shape} multi={mp}: {ex}",
+                      flush=True)
+    skipped = C.SKIPPED_CELLS
+    print(f"[dryrun] done; {len(failures)} failures, "
+          f"{len(skipped)} cells skipped by design")
+    for s in skipped:
+        print(f"[dryrun] skipped: {s}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

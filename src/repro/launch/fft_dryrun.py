@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede every jax-importing module (see dryrun.py).
+
+"""Dry-run of the paper's own workload at production scale: a distributed
+2-D FFT on the 16x16 (and 2x16x16) mesh, with the collective-schedule
+variants from repro.dist.pencil.  Emits loop-aware roofline terms per
+variant — the §Perf FFT iteration log reads from this.
+
+    python -m repro.launch.fft_dryrun --size 16384 [--mesh both]
+"""
+
+import argparse
+import json
+import time
+
+
+def run_variant(name, mesh, fn, args, in_shardings, out_dir, size):
+    import jax
+    from repro.analysis.hloparse import analyze
+    from repro.analysis.roofline import HW
+
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_shardings).lower(*args) \
+            .compile()
+    cost = analyze(compiled.as_text())
+    rec = {
+        "variant": name, "size": size,
+        "devices": int(len(jax.devices())),
+        "compile_s": round(time.time() - t0, 2),
+        "flops": cost.flops,
+        "traffic_bytes": cost.traffic,
+        "collective_bytes": cost.collectives,
+        "collective_total": cost.collective_total,
+        "compute_s": cost.flops / HW["peak_flops_f32"],
+        "memory_s": cost.traffic / HW["hbm_bw"],
+        "collective_s": cost.collective_total / HW["ici_bw"],
+    }
+    try:
+        mem = compiled.memory_analysis()
+        rec["temp_bytes"] = int(mem.temp_size_in_bytes)
+    except Exception:
+        pass
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[fft-dryrun] {name}: compute {rec['compute_s']:.2e}s "
+          f"memory {rec['memory_s']:.2e}s collective {rec['collective_s']:.2e}s "
+          f"(coll {rec['collective_total']/2**30:.2f} GiB/dev)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=16384,
+                    help="global H=W (paper used 1024; production-scale default 16384)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="runs/fft_dryrun")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.complexmath import SplitComplex
+    from repro.dist import pencil
+    from . import mesh as mesh_lib
+
+    n = args.size
+
+    def specs(mesh, axes):
+        sh = NamedSharding(mesh, P(axes, None))
+        ab = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        return (ab, ab), (sh, sh)
+
+    if args.mesh in ("single", "both"):
+        mesh = mesh_lib.make_production_mesh()
+        flat = ("data", "model")                  # all 256 chips on the FFT
+        (a_re, a_im), (sh_re, sh_im) = specs(mesh, flat)
+
+        def mk(fn):
+            return lambda re, im: tuple(fn(SplitComplex(re, im)))
+
+        run_variant("pfft2_base_256", mesh,
+                    mk(lambda z: pencil.pfft2(z, mesh, flat)),
+                    (a_re, a_im), ((sh_re, sh_im)), args.out, n)
+        run_variant("pfft2_chunks4_256", mesh,
+                    mk(lambda z: pencil.pfft2(z, mesh, flat, chunks=4)),
+                    (a_re, a_im), ((sh_re, sh_im)), args.out, n)
+        run_variant("pfft2_hier_256", mesh,
+                    mk(lambda z: pencil.pfft2_hierarchical(
+                        z, mesh, pod_axis="data", inner_axis="model")),
+                    (a_re, a_im), ((sh_re, sh_im)), args.out, n)
+        # real-input transform: halves row-pass FLOPs and transpose bytes
+        sh_r = NamedSharding(mesh, P(flat, None))
+        ar = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+        def rfft2_packed(x):
+            # pack even/odd columns as complex -> half-width 2-D pencil FFT
+            z = SplitComplex(x[:, 0::2], x[:, 1::2])
+            return tuple(pencil.pfft2(z, mesh, flat))
+
+        run_variant("prfft2_packed_256", mesh, rfft2_packed,
+                    (ar,), ((sh_r,)), args.out, n)
+
+    if args.mesh in ("multi", "both"):
+        mesh = mesh_lib.make_production_mesh(multi_pod=True)
+        flat = ("pod", "data", "model")
+        (a_re, a_im), (sh_re, sh_im) = specs(mesh, flat)
+        run_variant("pfft2_base_512", mesh,
+                    lambda re, im: tuple(pencil.pfft2(
+                        SplitComplex(re, im), mesh, flat)),
+                    (a_re, a_im), ((sh_re, sh_im)), args.out, n)
+        # hierarchical: intra-pod hop on (data, model), inter-pod hop on pod
+        spec_in = NamedSharding(mesh, P(("pod", "data", "model"), None))
+
+        def hier(re, im):
+            z = SplitComplex(re, im)
+            out = pencil.pfft2_hierarchical(z, mesh, pod_axis="pod",
+                                            inner_axis=("data", "model"))
+            return tuple(out)
+
+        run_variant("pfft2_hier_512", mesh, hier, (a_re, a_im),
+                    ((spec_in, spec_in)), args.out, n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Pipeline-parallel train-step variant for the multi-pod mesh.
+
+Hillclimb iteration for the collective-bound nemotron cell: instead of
+FSDP-gathering every layer's weights across the whole machine per
+microbatch, split the depth into one stage per pod (GPipe over the `pod`
+axis, repro.dist.pipeline).  Weights then shard (pod-stage, data, model)
+with NO cross-pod weight collectives; only microbatch activations cross
+pods (ppermute), plus the usual intra-pod TP/DP collectives.
+
+    python -m repro.launch.pp_variant --arch nemotron-4-340b [--microbatches 8]
+"""
+
+import argparse
+import json
+import time
+
+
+def build_pp_train_step(arch: str, seq_len: int, global_batch: int,
+                        n_microbatches: int):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import repro.configs as C
+    from repro.models import model as M, layers
+    from repro.train import optimizer as opt_lib
+    from . import mesh as mesh_lib, sharding as sh
+
+    import dataclasses
+    cfg = C.get_config(arch)
+    # f32 everywhere: XLA's AllReducePromotion pass crashes ('Invalid binary
+    # instruction opcode copy') cloning the bf16 all-reduces this pipeline's
+    # autodiff emits under partial-auto shard_map (XLA bug).  The PP-vs-FSDP
+    # comparison is about the collective schedule; byte counts are scaled
+    # by 0.5 when comparing against the bf16 baseline (see EXPERIMENTS.md).
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    mesh = mesh_lib.make_production_mesh(multi_pod=True)
+    n_stages = mesh.shape["pod"]
+    assert cfg.repeat % n_stages == 0
+    per_stage = cfg.repeat // n_stages
+
+    ap = M.abstract_params(cfg)
+
+    def split_stages(a):
+        return jax.ShapeDtypeStruct((n_stages, per_stage, *a.shape[1:]),
+                                    a.dtype)
+
+    ap_pp = dict(ap, blocks=jax.tree.map(split_stages, ap["blocks"]))
+
+    # shardings: stage dim -> pod; inner dims follow the tp2d rules with the
+    # pod axis stripped (it now carries the stage dim, not DP)
+    base = sh.param_shardings(cfg, mesh, ap)
+
+    def _strip_pod(ax):
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        kept = tuple(a for a in axes if a not in (None, "pod"))
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    def pp_spec(spec_leaf, abstract_leaf):
+        inner = tuple(_strip_pod(ax) for ax in spec_leaf.spec)
+        return NamedSharding(mesh, P("pod", *inner))
+
+    pshard = dict(
+        {k: v for k, v in sh.param_shardings(cfg, mesh, ap).items()
+         if k != "blocks"},
+        blocks=jax.tree.map(pp_spec, base["blocks"], ap["blocks"]))
+
+    ocfg = opt_lib.AdamWConfig(moments_dtype="bfloat16")
+    from repro.train.train_step import abstract_opt_state
+    ao = abstract_opt_state(cfg, ocfg, ap_pp)
+    oshard = {"step": NamedSharding(mesh, P()),
+              "m": pshard, "v": pshard}
+
+    from repro.data.pipeline import make_batch_specs
+    bspec = make_batch_specs(cfg, seq_len, global_batch)
+    bshard = sh.batch_shardings(cfg, mesh, bspec)
+
+    positions = None
+
+    def stage_fn(sp, x):
+        from repro.models import actsharding
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                               (x.shape[0], x.shape[1]))
+
+        def body(x, lp):
+            # pin (data, SP-over-model) sharding: the per-layer residuals
+            # the scan saves for backward are otherwise unsharded —
+            # measured 670 GiB temp without this constraint
+            x = actsharding.constrain(x)
+            for j, blk in enumerate(cfg.block_pattern):
+                x, a = M._block_apply(lp[f"b{j}"], None, blk, x, cfg, pos)
+            return x, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, sp)
+        return actsharding.constrain(x)
+
+    from repro.dist.pipeline import pipelined_apply
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(params):
+            x = layers.embed(params["embed"], batch["tokens"], cfg)
+            x = pipelined_apply(mesh, "pod", stage_fn, params["blocks"],
+                                x, n_microbatches, partial_auto=True)
+            x = layers.norm_apply(params["final_norm"], x, cfg)
+            logits = layers.unembed(params["embed"], x, cfg)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                                     -1)[..., 0]
+            return -ll.mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_state, metrics = opt_lib.adamw_update(
+            ocfg, grads, opt_state, params)
+        return new_params, new_state, dict(metrics, loss=loss)
+
+    return (train_step, (ap_pp, ao, bspec), (pshard, oshard, bshard),
+            mesh, cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="nemotron-4-340b")
+    ap.add_argument("--seq-len", type=int, default=4096)
+    ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--out", default="runs/dryrun/pp_variant")
+    args = ap.parse_args()
+
+    import jax
+    from repro.analysis.hloparse import analyze
+    from repro.analysis.roofline import HW
+    from repro.models import actsharding
+    from . import mesh as mesh_lib
+
+    step, absargs, shardings, mesh, cfg = build_pp_train_step(
+        args.arch, args.seq_len, args.global_batch, args.microbatches)
+
+    t0 = time.time()
+    with mesh, actsharding.activation_spec(mesh, ("data",), "model"):
+        compiled = jax.jit(step, in_shardings=shardings).lower(
+            *absargs).compile()
+    cost = analyze(compiled.as_text())
+    rec = {
+        "variant": f"pp_{args.arch}", "microbatches": args.microbatches,
+        "compile_s": round(time.time() - t0, 2),
+        "flops": cost.flops, "traffic_bytes": cost.traffic,
+        "collective_bytes": cost.collectives,
+        "collective_total": cost.collective_total,
+        "compute_s": cost.flops / HW["peak_flops_bf16"],
+        "memory_s": cost.traffic / HW["hbm_bw"],
+        "collective_s": cost.collective_total / HW["ici_bw"],
+    }
+    try:
+        rec["temp_bytes"] = int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:
+        pass
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, f"{args.arch}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[pp] {args.arch}: compute {rec['compute_s']:.2f}s "
+          f"memory {rec['memory_s']:.2f}s collective {rec['collective_s']:.2f}s "
+          f"temp {rec.get('temp_bytes', 0)/2**30:.1f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Logical sharding rules: param/optimizer/batch/cache PartitionSpecs per
+architecture profile.
+
+Profiles (DESIGN.md §5):
+- ``tp2d`` (default): Megatron-style tensor parallelism on the ``model``
+  axis (column-parallel up-projections, row-parallel down-projections,
+  vocab-parallel embeddings) combined with FSDP-style sharding of the other
+  weight dim over ``data``.  Experts shard over ``model`` (EP).
+- ``fsdp``: pure ZeRO-3 — every large tensor sharded over the combined
+  (data, model) axes on its largest divisible dim.  Used where head counts
+  don't divide the model axis (qwen1.5: 20 heads, xlstm: 4 heads).
+
+Every rule degrades gracefully: a mesh axis is dropped from a spec whenever
+the corresponding tensor dim is not divisible by the axis size, so any config
+compiles on any mesh (elastic rescaling).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from . import mesh as mesh_lib
+
+# Archs whose HEAD counts don't divide the model axis still shard cleanly on
+# their FLAT projection dims (20 heads x 128 = 2560 % 16 == 0), so tp2d is
+# the default everywhere.  A data-dim ZeRO-3 weight sharding ("fsdp") is kept
+# selectable for experiments, but the XLA SPMD partitioner resolves its
+# param/activation conflicts by replicating global activations ("involuntary
+# full rematerialization") — measured 145 GB temp vs 12 GB under tp2d for
+# xlstm-350m/train_4k; see EXPERIMENTS.md §Perf notes.
+FSDP_ARCHS: set = set()
+
+# param leaf names by parallelism role
+_COL_PARALLEL = {"wq", "wk", "wv", "wi", "wg", "up", "in_proj", "router"}
+_ROW_PARALLEL = {"wo", "down", "out_proj"}
+
+
+def profile_for(cfg: ModelConfig) -> str:
+    return "fsdp" if cfg.name in FSDP_ARCHS else "tp2d"
+
+
+def _axis_sizes(mesh: Mesh):
+    return {a: mesh.shape[a] for a in mesh.axis_names}
+
+
+def _fit(spec_axes, shape, mesh: Mesh):
+    """Drop mesh axes whose size does not divide the tensor dim."""
+    sizes = _axis_sizes(mesh)
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        out.append(ax if dim % total == 0 else None)
+    return P(*out)
+
+
+def _param_spec(path_keys, shape, cfg: ModelConfig, mesh: Mesh,
+                profile: str) -> P:
+    name = path_keys[-1]
+    in_moe = "moe" in path_keys
+    data = mesh_lib.data_axes(mesh)
+    data = data if len(data) > 1 else (data[0] if data else None)
+    ndim = len(shape)
+
+    if ndim <= 1:
+        return P(*([None] * ndim))
+
+    if profile == "fsdp":
+        # embeddings stay vocab-parallel on `model` even under fsdp so the
+        # CE head's logits shard over vocab instead of replicating
+        if name == "tok":
+            return _fit(("model", data), shape, mesh)
+        if name == "head":
+            return _fit((data, "model"), shape, mesh)
+        # ZeRO-3: biggest dim over every device
+        all_axes = tuple(mesh.axis_names)
+        big = int(np.argmax(shape))
+        spec = [None] * ndim
+        spec[big] = all_axes
+        fitted = _fit(spec, shape, mesh)
+        if fitted[big] is not None:
+            return fitted
+        spec[big] = data                       # degrade: data axes only
+        return _fit(spec, shape, mesh)
+
+    # --- tp2d ---
+    if in_moe and name in ("wi", "wg"):        # (R, E, d, ff): EP + FSDP
+        return _fit((None, "model", data, None), shape, mesh)
+    if in_moe and name == "wo":                # (R, E, ff, d)
+        return _fit((None, "model", None, data), shape, mesh)
+    if name == "tok":                          # (V, d) vocab-parallel
+        return _fit(("model", data), shape, mesh)
+    if name == "head":                         # (d, V)
+        return _fit((data, "model"), shape, mesh)
+    if name in _COL_PARALLEL:                  # (..., d_in, d_out)
+        spec = [None] * (ndim - 2) + [data, "model"]
+        return _fit(spec, shape, mesh)
+    if name in _ROW_PARALLEL:                  # (..., d_in, d_out)
+        spec = [None] * (ndim - 2) + ["model", data]
+        return _fit(spec, shape, mesh)
+    if name in ("bi", "bq", "bk", "bv"):       # column-parallel biases
+        spec = [None] * (ndim - 1) + ["model"]
+        return _fit(spec, shape, mesh)
+    if name in ("wi", "wf"):                   # mlstm gate projections
+        spec = [None] * (ndim - 2) + [data, None]
+        return _fit(spec, shape, mesh)
+    return P(*([None] * ndim))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, abstract_params: Any):
+    """NamedSharding pytree matching the param tree."""
+    profile = profile_for(cfg)
+
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        spec = _param_spec(keys, leaf.shape, cfg, mesh, profile)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, abstract_opt: Any,
+                  abstract_params: Any):
+    """Optimizer moments shard like their params; scalars replicate."""
+    pshard = param_shardings(cfg, mesh, abstract_params)
+
+    def like_params(sub):
+        return jax.tree.map(lambda s: s, pshard)
+
+    out = {}
+    for k, v in abstract_opt.items():
+        if k == "step":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = like_params(v)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_specs: Any):
+    """Batch dim over (pod, data); model dim of stub embeddings unsharded."""
+    data = mesh_lib.data_axes(mesh)
+    data = data if len(data) > 1 else (data[0] if data else None)
+
+    def one(leaf):
+        spec = [data] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, _fit(spec, leaf.shape, mesh))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, abstract_cache: Any,
+                    batch: int):
+    """Decode caches: batch over data when divisible, else SP — shard the
+    cache's sequence (slots) dim over data; recurrent states shard their
+    head dim over model."""
+    data = mesh_lib.data_axes(mesh)
+    data = data if len(data) > 1 else (data[0] if data else None)
+    sizes = _axis_sizes(mesh)
+    dsize = int(np.prod([sizes[a] for a in (data if isinstance(data, tuple)
+                                            else (data,))])) if data else 1
+    batch_ok = batch % dsize == 0 and batch >= dsize
+
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        # leading dim is the scan-stacked repeat axis (from init_cache);
+        # actual tensor dims start at 1
+        if batch_ok:
+            spec = [None, data] + [None] * (nd - 2)
+            if name in ("k", "v"):
+                # NOTE: when kv heads don't divide the model axis (qwen1.5)
+                # the cache stays replicated over `model`.  Sharding the
+                # slots dim instead was tried and REFUTED: SPMD all-gathers
+                # the whole cache per decoded token (collective term
+                # 0.02 s -> 4.3 s measured); see EXPERIMENTS.md §Perf D1.
+                spec = [None, data, None, "model", None][:nd]
+            return NamedSharding(mesh, _fit(spec, leaf.shape, mesh))
+        # SP: shard sequence/slots (dim 2 for k/v/pos), heads over model
+        if name in ("k", "v"):
+            spec = [None, None, data, "model", None][:nd]
+        elif name == "pos":
+            spec = [None, None, data][:nd]
+        elif name in ("ssm", "c"):
+            spec = [None, None, "model"] + [None] * (nd - 3)
+        else:
+            spec = [None] * nd
+        return NamedSharding(mesh, _fit(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def replicated(mesh: Mesh, tree: Any):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,3 @@
+"""repro.models — config-driven model zoo (pure JAX, dict pytrees)."""
+from .config import ModelConfig
+from . import model, layers, moe, ssm, xlstm, cache

@@ -1,0 +1,87 @@
+"""Decode-time state: KV caches (full + sliding-window ring), SSM and xLSTM
+recurrent states.
+
+A cache is a dict pytree so it stacks cleanly along the scan axis (one slice
+per super-block repeat).  KV caches write at ``position`` (full) or
+``position % window`` (ring) and carry an explicit per-slot position plane —
+attention masking reads positions, never pointer arithmetic, so ring
+wraparound falls out of the same streaming-softmax mask used in training
+(sliding-window + causal + emptiness are all position predicates).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def kv_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    """KV cache for one attention layer.  Ring-sized for SWA archs."""
+    slots = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, slots, kv, hd), dtype),
+        "v": jnp.zeros((batch, slots, kv, hd), dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def kv_update(cache, k_new, v_new, position):
+    """Insert one token's K/V.  k_new/v_new: (B, KV, D); position: (B,).
+
+    Returns (cache', k_all, v_all, kv_positions) where kv_positions carries
+    -1 for empty slots (masked off by the attention's position predicate).
+    """
+    slots = cache["k"].shape[1]
+    b = k_new.shape[0]
+    idx = position % slots
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, idx].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[rows, idx].set(v_new.astype(cache["v"].dtype))
+    pos = cache["pos"].at[rows, idx].set(position)
+    new = {"k": k, "v": v, "pos": pos}
+    return new, k, v, pos
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+    }
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    din = 2 * cfg.d_model
+    nh = cfg.n_heads
+    dh = din // nh
+    return {
+        "conv": jnp.zeros((batch, 3, din), dtype),
+        "c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -30.0, jnp.float32),
+    }
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    nh = cfg.n_heads
+    dh = cfg.slstm_head_dim or cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return (z, z, jnp.full((batch, nh, dh), -30.0, jnp.float32), z)
+
+
+def block_cache_init(block: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.float32):
+    if block in ("attn_mlp", "attn_moe", "shared_attn"):
+        return kv_init(cfg, batch, max_len, dtype)
+    if block == "mamba2":
+        return ssm_state_init(cfg, batch, dtype)
+    if block == "mlstm":
+        return mlstm_state_init(cfg, batch, dtype)
+    if block == "slstm":
+        return slstm_state_init(cfg, batch, dtype)
+    if block == "fourier_mlp":
+        return {}                     # parameter-free mixer: no decode state
+    raise ValueError(block)

@@ -1,0 +1,286 @@
+"""Core transformer layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+Pure JAX, dict pytrees, init/apply pairs.  Attention uses a streaming
+(online-softmax) formulation scanned over KV chunks so peak activation
+memory is O(S * chunk) instead of O(S^2) — the pure-JAX stand-in for a
+flash-attention kernel (kernel effort in this repo is reserved for the
+paper's FFT hot spots; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(dt)
+
+
+def rms_head_norm(x, scale, eps=1e-6):
+    """Per-head RMS norm (qk-norm): x (..., head_dim)."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (streaming softmax)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, h * hd)),
+        "wk": _init(ks[1], (d, kv * hd)),
+        "wv": _init(ks[2], (d, kv * hd)),
+        "wo": _init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend_chunked(q, k, v, cfg: ModelConfig, q_positions, kv_positions):
+    """Streaming-softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D).  Scans over KV chunks with a
+    running (max, denom, acc) — O(Sq * chunk) live memory.
+    Causality and sliding windows are applied from positions.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    chunk = min(cfg.attn_chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1_000_000)
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, group, hd) * scale
+
+    def step(carry, i):
+        # dynamic-slice the chunk out of the cache: pre-stacking transposed
+        # (nc, B, C, KV, D) copies materialised the WHOLE cache as a new
+        # (f32) buffer per layer — 1.1 TB/layer for qwen1.5 decode_32k
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=1)
+        pb = jax.lax.dynamic_slice_in_dim(kv_positions, i * chunk, chunk,
+                                          axis=1)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32)
+        mask = pb[:, None, :] <= q_positions[:, :, None]   # causal
+        if cfg.sliding_window is not None:
+            mask &= pb[:, None, :] > (q_positions[:, :, None]
+                                      - cfg.sliding_window)
+        mask &= pb[:, None, :] >= 0                        # padding
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", pexp, vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, group), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, group, hd), jnp.float32)
+    if not cfg.causal:
+        q_positions = jnp.full_like(q_positions, skv + 1)  # attend everywhere
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(n_chunks, dtype=jnp.int32))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_apply(p, x, cfg: ModelConfig, positions):
+    """Full-sequence attention (training / prefill).
+
+    Uses the flash custom-VJP path: lax.scan autodiff would otherwise save
+    O(S^2/chunk) probability blocks per layer (see repro.models.flash)."""
+    from .flash import flash_attention
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, positions, positions, cfg.attn_chunk,
+                          cfg.sliding_window, cfg.causal)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache, position):
+    """One-token decode with a KV cache (see repro.models.cache)."""
+    from . import cache as cache_lib
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg, position[:, None])
+    cache, k_all, v_all, kv_pos = cache_lib.kv_update(cache, k[:, 0], v[:, 0],
+                                                      position)
+    out = _attend_chunked(q, k_all, v_all, cfg, position[:, None], kv_pos)
+    return out.reshape(b, 1, -1) @ p["wo"], cache
+
+
+def attention_prefill(p, x, cfg: ModelConfig, positions, cache):
+    """Bulk prefill: full-sequence attention + write K/V into the cache.
+
+    Only the last min(S, slots) positions are written (a sliding-window ring
+    keeps just the window; later positions win by construction, no duplicate
+    scatter indices)."""
+    from .flash import flash_attention
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, positions, positions, cfg.attn_chunk,
+                          cfg.sliding_window, cfg.causal)
+    slots = cache["k"].shape[1]
+    keep = min(s, slots)
+    k_t, v_t = k[:, -keep:], v[:, -keep:]
+    pos_t = positions[:, -keep:]
+    idx = pos_t % slots
+    rows = jnp.arange(b)[:, None]
+    cache = {"k": cache["k"].at[rows, idx].set(k_t.astype(cache["k"].dtype)),
+             "v": cache["v"].at[rows, idx].set(v_t.astype(cache["v"].dtype)),
+             "pos": cache["pos"].at[rows, idx].set(pos_t.astype(jnp.int32))}
+    return out.reshape(b, s, -1) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        p = {"wi": _init(ks[0], (d, ff)), "wg": _init(ks[1], (d, ff)),
+             "wo": _init(ks[2], (ff, d))}
+    else:
+        p = {"wi": _init(ks[0], (d, ff)), "wo": _init(ks[2], (ff, d))}
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((ff,), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.mlp_type == "gelu":
+        h = x @ p["wi"]
+        if cfg.mlp_bias:
+            h = h + p["bi"]
+        h = jax.nn.gelu(h)
+    elif cfg.mlp_type == "relu2":                 # nemotron-4 squared-ReLU
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:
+        raise ValueError(cfg.mlp_type)
+    out = h @ p["wo"]
+    if cfg.mlp_bias:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig):
+    p = {"tok": _init(key, (cfg.padded_vocab, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = _init(jax.random.fold_in(key, 1),
+                          (cfg.d_model, cfg.padded_vocab))
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return x @ p["tok"].T
+    return x @ p["head"]

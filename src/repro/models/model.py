@@ -1,0 +1,423 @@
+"""The unified LM: config-driven assembly of every architecture in the pool.
+
+Depth is ``repeat`` copies of a super-block (``cfg.block_pattern``), scanned
+with stacked params — compile time is O(pattern), not O(layers), which keeps
+the 512-device dry-runs of 94-layer models tractable.  Zamba2-style shared
+blocks live outside the scan and are closed over (one copy of the weights,
+applied every super-block).
+
+Entry points:
+  init_params / abstract_params         param pytrees (dict-of-dicts)
+  forward(params, cfg, batch)           logits, aux
+  loss_fn(params, cfg, batch)           scalar loss, metrics
+  init_cache / decode_step              serving path (one token, cached)
+  param_count / active_param_count      N for MODEL_FLOPS = 6*N*D
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import actsharding
+from . import cache as cache_lib
+from . import layers, moe, ssm, xlstm
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, blk: str, cfg: ModelConfig):
+    if blk == "attn_mlp":
+        k1, k2 = jax.random.split(key)
+        return {"norm1": layers.norm_init(cfg), "attn": layers.attention_init(k1, cfg),
+                "norm2": layers.norm_init(cfg), "mlp": layers.mlp_init(k2, cfg)}
+    if blk == "attn_moe":
+        k1, k2 = jax.random.split(key)
+        return {"norm1": layers.norm_init(cfg), "attn": layers.attention_init(k1, cfg),
+                "norm2": layers.norm_init(cfg), "moe": moe.moe_init(k2, cfg)}
+    if blk == "fourier_mlp":
+        return {"norm1": layers.norm_init(cfg), "norm2": layers.norm_init(cfg),
+                "mlp": layers.mlp_init(key, cfg)}
+    if blk == "mamba2":
+        return {"norm": layers.norm_init(cfg), "mixer": ssm.mamba2_init(key, cfg)}
+    if blk == "mlstm":
+        return {"norm": layers.norm_init(cfg), "mixer": xlstm.mlstm_init(key, cfg)}
+    if blk == "slstm":
+        return {"norm": layers.norm_init(cfg), "mixer": xlstm.slstm_init(key, cfg)}
+    if blk == "shared_attn":
+        return {}                       # weights live in params["shared"]
+    raise ValueError(blk)
+
+
+def _superblock_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{j}": _block_init(ks[j], blk, cfg)
+            for j, blk in enumerate(cfg.block_pattern)}
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_blocks, k_shared = jax.random.split(key, 3)
+    params = {"embed": layers.embedding_init(k_embed, cfg)}
+    block_keys = jax.random.split(k_blocks, cfg.repeat)
+    params["blocks"] = jax.vmap(
+        lambda k: _superblock_init(k, cfg))(block_keys)
+    if "shared_attn" in cfg.block_pattern:
+        k1, k2 = jax.random.split(k_shared)
+        params["shared"] = {
+            "norm1": layers.norm_init(cfg),
+            "attn": layers.attention_init(k1, cfg),
+            "norm2": layers.norm_init(cfg),
+            "mlp": layers.mlp_init(k2, cfg)}
+    params["final_norm"] = layers.norm_init(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda a: a.astype(dtype), params)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_count(tree) -> int:
+    return int(sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree)))
+
+
+def active_param_count(cfg: ModelConfig, tree) -> int:
+    """Params touched per token (MoE: active experts only)."""
+    total = param_count(tree)
+    if cfg.n_experts == 0:
+        return total
+    # subtract the inactive fraction of expert weights
+    def expert_size(sb):
+        e_params = [v for k, v in sb.items() if k in ("wi", "wg", "wo")]
+        return sum(int(np.prod(x.shape)) for x in e_params)
+    moe_total = 0
+    blocks = jax.tree.leaves  # noqa (visual aid only)
+    for j, blk in enumerate(cfg.block_pattern):
+        if blk == "attn_moe":
+            sb = {k: v for k, v in
+                  _abstract_block(cfg, j).items()}
+            moe_total += expert_size(sb["moe"]) * cfg.repeat
+    inactive = moe_total * (1.0 - cfg.n_experts_active / cfg.n_experts)
+    return int(total - inactive)
+
+
+def _abstract_block(cfg: ModelConfig, j: int):
+    blk = cfg.block_pattern[j]
+    return jax.eval_shape(
+        lambda: _block_init(jax.random.PRNGKey(0), blk, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_apply(bp, shared, blk: str, x, cfg: ModelConfig, positions):
+    aux = jnp.zeros((), jnp.float32)
+    if blk == "attn_mlp":
+        x = x + layers.attention_apply(bp["attn"],
+                                       layers.norm_apply(bp["norm1"], x, cfg),
+                                       cfg, positions)
+        x = x + layers.mlp_apply(bp["mlp"],
+                                 layers.norm_apply(bp["norm2"], x, cfg), cfg)
+    elif blk == "attn_moe":
+        x = x + layers.attention_apply(bp["attn"],
+                                       layers.norm_apply(bp["norm1"], x, cfg),
+                                       cfg, positions)
+        y, aux = moe.moe_apply(bp["moe"],
+                               layers.norm_apply(bp["norm2"], x, cfg), cfg)
+        x = x + y
+    elif blk == "fourier_mlp":
+        from repro.core.spectral import fourier_mix
+        x = x + fourier_mix(layers.norm_apply(bp["norm1"], x, cfg))
+        x = x + layers.mlp_apply(bp["mlp"],
+                                 layers.norm_apply(bp["norm2"], x, cfg), cfg)
+    elif blk == "mamba2":
+        x = x + ssm.mamba2_apply(bp["mixer"],
+                                 layers.norm_apply(bp["norm"], x, cfg), cfg)
+    elif blk == "mlstm":
+        x = x + xlstm.mlstm_apply(bp["mixer"],
+                                  layers.norm_apply(bp["norm"], x, cfg), cfg)
+    elif blk == "slstm":
+        x = x + xlstm.slstm_apply(bp["mixer"],
+                                  layers.norm_apply(bp["norm"], x, cfg), cfg)
+    elif blk == "shared_attn":
+        sp = shared
+        x = x + layers.attention_apply(sp["attn"],
+                                       layers.norm_apply(sp["norm1"], x, cfg),
+                                       cfg, positions)
+        x = x + layers.mlp_apply(sp["mlp"],
+                                 layers.norm_apply(sp["norm2"], x, cfg), cfg)
+    else:
+        raise ValueError(blk)
+    return x, aux
+
+
+def hidden_states(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+                  positions=None):
+    """Trunk: embeddings -> scanned super-blocks -> final norm.
+    Returns (x (B,S,d), aux_loss)."""
+    if tokens is not None:
+        x = layers.embed(params["embed"], tokens, cfg)
+        b, s = tokens.shape
+    else:
+        assert embeds is not None, "need tokens or embeds"
+        x = embeds
+        b, s = embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared = params.get("shared")
+    x = actsharding.constrain(x)        # pin batch sharding after the gather
+
+    def superblock(x, sbp):
+        x = actsharding.constrain(x)
+        aux = jnp.zeros((), jnp.float32)
+        for j, blk in enumerate(cfg.block_pattern):
+            x, a = _block_apply(sbp[f"b{j}"], shared, blk, x, cfg, positions)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat:
+        superblock = jax.checkpoint(superblock)
+    x, auxs = jax.lax.scan(superblock, x, params["blocks"])
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+    return x, auxs.sum()
+
+
+def _pad_bias(cfg: ModelConfig, dtype):
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                     0.0, -1e30).astype(dtype)
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            positions=None):
+    """Returns (logits, aux_loss).  tokens (B,S) or embeds (B,S,d).
+
+    ``cfg.input_mode`` picks the *default* input spec (dry-run/training);
+    both kinds are accepted here — a VLM prefills on patch embeddings but
+    can also run text-only on tokens.
+    """
+    x, aux = hidden_states(params, cfg, tokens=tokens, embeds=embeds,
+                           positions=positions)
+    logits = layers.unembed(params["embed"], x, cfg)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits + _pad_bias(cfg, logits.dtype)
+    return logits, aux
+
+
+# sequence-chunk size for the CE head: bounds the live (B, chunk, V) logits
+# slab — the full (B, S, V) tensor is never materialised (big-vocab models
+# would otherwise spend tens of GB per device on it).
+LOSS_CHUNK = 512
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: dict(tokens|embeds, labels, [mask]).  Next-token CE, computed
+    over sequence chunks with rematerialisation."""
+    x, aux = hidden_states(params, cfg, tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    b, s, d = x.shape
+    c = min(LOSS_CHUNK, s)
+    n_chunks = s // c if s % c == 0 else 1
+    if s % c != 0:
+        c = s
+
+    xc = x.reshape(b, n_chunks, c, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, c).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunks, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def ce_chunk(carry, inp):
+        xb, lb, mb = inp
+        logits = layers.unembed(params["embed"], xb, cfg)
+        logits = (logits + _pad_bias(cfg, logits.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0] - lse
+        return carry - jnp.sum(ll * mb), None
+
+    ce_sum, _ = jax.lax.scan(ce_chunk, jnp.zeros((), jnp.float32),
+                             (xc, lc, mc))
+    ce = ce_sum / jnp.maximum(mask.sum(), 1.0)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32):
+    """Stacked (repeat, ...) caches matching the param scan."""
+    def one(_):
+        return {f"b{j}": cache_lib.block_cache_init(blk, cfg, batch, max_len,
+                                                    dtype)
+                for j, blk in enumerate(cfg.block_pattern)}
+    return jax.vmap(one)(jnp.arange(cfg.repeat))
+
+
+def _block_prefill(bp, shared, blk: str, x, cfg: ModelConfig, cache,
+                   positions):
+    if blk in ("attn_mlp", "attn_moe"):
+        h = layers.norm_apply(bp["norm1"], x, cfg)
+        y, cache = layers.attention_prefill(bp["attn"], h, cfg, positions,
+                                            cache)
+        x = x + y
+        h = layers.norm_apply(bp["norm2"], x, cfg)
+        if blk == "attn_mlp":
+            x = x + layers.mlp_apply(bp["mlp"], h, cfg)
+        else:
+            # prefill: capacity with headroom (dropless cap=Tg would
+            # materialise a (G,E,Tg,d) dispatch tensor; see moe_apply)
+            y, _ = moe.moe_apply(bp["moe"], h, cfg,
+                                 cap_scale=cfg.moe_prefill_cap_scale)
+            x = x + y
+    elif blk == "fourier_mlp":
+        from repro.core.spectral import fourier_mix
+        x = x + fourier_mix(layers.norm_apply(bp["norm1"], x, cfg))
+        x = x + layers.mlp_apply(bp["mlp"],
+                                 layers.norm_apply(bp["norm2"], x, cfg), cfg)
+    elif blk == "mamba2":
+        y, cache = ssm.mamba2_prefill(bp["mixer"],
+                                      layers.norm_apply(bp["norm"], x, cfg),
+                                      cfg, cache)
+        x = x + y
+    elif blk == "mlstm":
+        y, cache = xlstm.mlstm_prefill(bp["mixer"],
+                                       layers.norm_apply(bp["norm"], x, cfg),
+                                       cfg, cache)
+        x = x + y
+    elif blk == "slstm":
+        y, cache = xlstm.slstm_prefill(bp["mixer"],
+                                       layers.norm_apply(bp["norm"], x, cfg),
+                                       cfg, cache)
+        x = x + y
+    elif blk == "shared_attn":
+        sp = shared
+        h = layers.norm_apply(sp["norm1"], x, cfg)
+        y, cache = layers.attention_prefill(sp["attn"], h, cfg, positions,
+                                            cache)
+        x = x + y
+        x = x + layers.mlp_apply(sp["mlp"],
+                                 layers.norm_apply(sp["norm2"], x, cfg), cfg)
+    else:
+        raise ValueError(blk)
+    return x, cache
+
+
+def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            cache=None, positions=None):
+    """Serving prefill: forward over the prompt, caches populated.
+    Returns (logits (B, S, V), cache')."""
+    if tokens is not None:
+        x = layers.embed(params["embed"], tokens, cfg)
+        b, s = tokens.shape
+    else:
+        x = embeds
+        b, s = embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared = params.get("shared")
+
+    x = actsharding.constrain(x)
+
+    def superblock(x, inp):
+        sbp, sbc = inp
+        x = actsharding.constrain(x)
+        new_c = {}
+        for j, blk in enumerate(cfg.block_pattern):
+            x, c = _block_prefill(sbp[f"b{j}"], shared, blk, x, cfg,
+                                  sbc[f"b{j}"], positions)
+            new_c[f"b{j}"] = c
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(superblock, x, (params["blocks"], cache))
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+    logits = layers.unembed(params["embed"], x, cfg)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_bias
+    return logits, new_cache
+
+
+def _block_decode(bp, shared, blk: str, x, cfg: ModelConfig, cache, position):
+    if blk in ("attn_mlp", "attn_moe"):
+        h = layers.norm_apply(bp["norm1"], x, cfg)
+        y, cache = layers.attention_decode(bp["attn"], h, cfg, cache, position)
+        x = x + y
+        h = layers.norm_apply(bp["norm2"], x, cfg)
+        if blk == "attn_mlp":
+            x = x + layers.mlp_apply(bp["mlp"], h, cfg)
+        else:
+            y, _ = moe.moe_apply(bp["moe"], h, cfg, dropless=True)
+            x = x + y
+    elif blk == "fourier_mlp":
+        # parameter-free mixing degenerates at S=1: identity on decode
+        x = x + layers.mlp_apply(bp["mlp"],
+                                 layers.norm_apply(bp["norm2"], x, cfg), cfg)
+    elif blk == "mamba2":
+        y, cache = ssm.mamba2_decode(bp["mixer"],
+                                     layers.norm_apply(bp["norm"], x, cfg),
+                                     cfg, cache)
+        x = x + y
+    elif blk == "mlstm":
+        y, cache = xlstm.mlstm_decode(bp["mixer"],
+                                      layers.norm_apply(bp["norm"], x, cfg),
+                                      cfg, cache)
+        x = x + y
+    elif blk == "slstm":
+        y, cache = xlstm.slstm_decode(bp["mixer"],
+                                      layers.norm_apply(bp["norm"], x, cfg),
+                                      cfg, cache)
+        x = x + y
+    elif blk == "shared_attn":
+        sp = shared
+        h = layers.norm_apply(sp["norm1"], x, cfg)
+        y, cache = layers.attention_decode(sp["attn"], h, cfg, cache, position)
+        x = x + y
+        x = x + layers.mlp_apply(sp["mlp"],
+                                 layers.norm_apply(sp["norm2"], x, cfg), cfg)
+    else:
+        raise ValueError(blk)
+    return x, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, position):
+    """One decode step.  tokens: (B,) int32; position: (B,) absolute
+    position.  Returns (logits (B, V), cache').  Embedding-input archs
+    (vlm/audio) still decode over tokens — the stub frontend only feeds
+    prefill/training."""
+    x = layers.embed(params["embed"], tokens[:, None], cfg)
+    shared = params.get("shared")
+    x = actsharding.constrain(x)
+
+    def superblock(x, inp):
+        sbp, sbc = inp
+        x = actsharding.constrain(x)
+        new_c = {}
+        for j, blk in enumerate(cfg.block_pattern):
+            x, c = _block_decode(sbp[f"b{j}"], shared, blk, x, cfg,
+                                 sbc[f"b{j}"], position)
+            new_c[f"b{j}"] = c
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(superblock, x, (params["blocks"], cache))
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+    logits = layers.unembed(params["embed"], x, cfg)[:, 0]
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_bias
+    return logits, new_cache

@@ -1,0 +1,202 @@
+"""Mamba2 (SSD) mixer block — chunked parallel scan for training/prefill,
+O(1) recurrent state for decode.
+
+Follows the state-space-duality formulation (Dao & Gu, 2024): per head h,
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T     (state: P x N)
+    y_t = C_t . h_t + D_h x_t
+computed chunk-parallel: an intra-chunk quadratic term plus an inter-chunk
+state scan.  The short causal conv on the (x, B, C) streams can optionally
+run through the paper's FFT library (``use_fft_conv``, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _init, norm_init, norm_apply
+
+
+def mamba2_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.d_inner
+    ns = cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = din + 2 * ns
+    ks = jax.random.split(key, 5)
+    p = {
+        # in_proj emits [z (gate), x, B, C, dt]
+        "in_proj": _init(ks[0], (d, 2 * din + 2 * ns + nh)),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_ch), scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),     # A = -exp(a_log)
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, nh))),
+        "out_proj": _init(ks[2], (din, d)),
+        "out_norm": jnp.ones((din,), jnp.float32),
+    }
+    return p
+
+
+def _causal_conv(u, w, b, cfg: ModelConfig, init_state=None):
+    """Depthwise causal conv along seq: u (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    if cfg.use_fft_conv and init_state is None:
+        from repro.core.fftconv import fft_conv
+        # (B, S, C) -> (B, C, S) signals, depthwise kernels (C, K)
+        y = fft_conv(jnp.moveaxis(u, -1, -2), w.T[None])   # broadcast batch
+        y = jnp.moveaxis(y, -2, -1)
+    else:
+        if init_state is None:
+            up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+        else:
+            up = jnp.concatenate([init_state, u], axis=1)
+        y = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(y + b)
+
+
+def _ssd_chunked(x, dt, a, b_in, c_in, d_skip, cfg: ModelConfig,
+                 init_state=None):
+    """Chunk-parallel SSD.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) negative decay rates;
+    b_in/c_in: (B, S, N).  Returns y (B, S, H, P) and final state
+    (B, H, P, N).
+    """
+    bsz, s, nh, hp = x.shape
+    ns = b_in.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    da = dt * a                                            # (B, S, H) <= 0
+    xc = x.reshape(bsz, nc, q, nh, hp)
+    dtc = dt.reshape(bsz, nc, q, nh)
+    dac = da.reshape(bsz, nc, q, nh)
+    bc = b_in.reshape(bsz, nc, q, ns)
+    cc = c_in.reshape(bsz, nc, q, ns)
+
+    seg = jnp.cumsum(dac, axis=2)                          # within-chunk csum
+    # intra-chunk: L[t, u] = exp(seg_t - seg_u) for u <= t
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]    # (B,NC,q,q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bctn,bcun->bctu", cc, bc,
+                    preferred_element_type=jnp.float32)     # (B,NC,q,q)
+    dx = dtc[..., None] * xc                               # (B,NC,q,H,P)
+    y_intra = jnp.einsum("bctu,bctuh,bcuhp->bcthp", cb, l_mat, dx,
+                         preferred_element_type=jnp.float32)
+
+    # chunk-final states: S_c = sum_u exp(seg_end - seg_u) B_u (dt_u x_u)
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)        # (B,NC,q,H)
+    state_c = jnp.einsum("bcun,bcuh,bcuhp->bchpn", bc,
+                         decay_to_end, dx,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk scan: carry running state across chunks
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                # (B,NC,H)
+
+    def scan_fn(h_prev, inp):
+        s_c, g = inp                                       # (B,H,P,N), (B,H)
+        h_new = h_prev * g[..., None, None] + s_c
+        return h_new, h_prev
+
+    h0 = (jnp.zeros((bsz, nh, hp, ns), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    sc_t = jnp.moveaxis(state_c, 1, 0)                     # (NC,B,H,P,N)
+    gd_t = jnp.moveaxis(chunk_decay, 1, 0)                 # (NC,B,H)
+    h_last, h_prevs = jax.lax.scan(scan_fn, h0, (sc_t, gd_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,NC,H,P,N)
+
+    # inter-chunk contribution: y_t += C_t . (decay_from_start_t * h_prev)
+    decay_from_start = jnp.exp(seg)                        # (B,NC,q,H)
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp", cc, h_prevs,
+                         decay_from_start,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, s, nh, hp)
+    y = y + d_skip[None, None, :, None] * x
+    return y.astype(x.dtype), h_last
+
+
+def _split_proj(p, u, cfg: ModelConfig):
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = u[..., :din]
+    xbc = u[..., din:din + din + 2 * ns]
+    dt_raw = u[..., -nh:]
+    return z, xbc, dt_raw
+
+
+def mamba2_apply(p, x, cfg: ModelConfig):
+    """Full-sequence mixer: x (B, S, d) -> (B, S, d)."""
+    bsz, s, _ = x.shape
+    din, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    u = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], cfg)
+    xin = xbc[..., :din].reshape(bsz, s, nh, hp)
+    b_in = xbc[..., din:din + ns]
+    c_in = xbc[..., din + ns:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])            # (B,S,H)
+    a = -jnp.exp(p["a_log"])
+    y, _ = _ssd_chunked(xin, dt, a, b_in, c_in, p["d_skip"], cfg)
+    y = y.reshape(bsz, s, din) * jax.nn.silu(z)
+    # grouped RMS norm over inner dim
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]
+         ).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+def mamba2_prefill(p, x, cfg: ModelConfig, state):
+    """Full-sequence mixer that also returns decode state (conv tail + SSM)."""
+    bsz, s, _ = x.shape
+    din, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    u = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(p, u, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"], cfg)
+    xin = xbc[..., :din].reshape(bsz, s, nh, hp)
+    b_in = xbc[..., din:din + ns]
+    c_in = xbc[..., din + ns:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, h_last = _ssd_chunked(xin, dt, a, b_in, c_in, p["d_skip"], cfg)
+    y = y.reshape(bsz, s, din) * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]
+         ).astype(x.dtype)
+    k = p["conv_w"].shape[0]
+    tail = jnp.pad(xbc_raw, ((0, 0), (max(k - 1 - s, 0), 0), (0, 0)))[:, -(k - 1):]
+    new_state = {"conv": tail.astype(state["conv"].dtype), "ssm": h_last}
+    return y @ p["out_proj"], new_state
+
+
+def mamba2_decode(p, x, cfg: ModelConfig, state):
+    """One-token decode: x (B, 1, d); state dict w/ 'conv' and 'ssm'."""
+    bsz = x.shape[0]
+    din, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    u = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    # conv via ring state (B, K-1, C)
+    conv_in = jnp.concatenate([state["conv"], xbc], axis=1)
+    k = p["conv_w"].shape[0]
+    y = sum(conv_in[:, i:i + 1] * p["conv_w"][i] for i in range(k))
+    xbc = jax.nn.silu(y + p["conv_b"])
+    new_conv = conv_in[:, 1:]
+    xin = xbc[..., :din].reshape(bsz, nh, hp)
+    b_in = xbc[:, 0, din:din + ns]
+    c_in = xbc[:, 0, din + ns:]
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])      # (B,H)
+    a = -jnp.exp(p["a_log"])
+    g = jnp.exp(dt * a)                                    # (B,H)
+    h = state["ssm"]                                       # (B,H,P,N)
+    h = h * g[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xin, b_in, dt)
+    y = jnp.einsum("bn,bhpn->bhp", c_in, h)
+    y = y + p["d_skip"][None, :, None] * xin
+    y = y.reshape(bsz, 1, din) * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]
+         ).astype(x.dtype)
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": h}

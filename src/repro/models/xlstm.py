@@ -1,0 +1,306 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan).  Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM is a gated linear-attention recurrence:
+    m_t = max(f~_t + m_{t-1}, i~_t)                       (stabilizer)
+    C_t = e^{f~_t+m_{t-1}-m_t} C_{t-1} + e^{i~_t-m_t} k_t v_t^T
+    n_t = e^{f~_t+m_{t-1}-m_t} n_{t-1} + e^{i~_t-m_t} k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, e^{-m_t})
+Training/prefill use an exact chunkwise form (intra-chunk QxQ decay matrix +
+inter-chunk (dk, dv) state scan) — O(S * chunk) live memory, mirroring the
+attention path.  Decode updates (C, n, m) in O(1).
+
+sLSTM has recurrent gate connections (h_{t-1} enters every gate), so it is
+inherently sequential: a lax.scan over time with per-head block-diagonal
+recurrent weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _init
+
+LOG_EPS = -30.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    din = 2 * d                                   # proj factor 2
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _init(ks[0], (d, 2 * din)),         # -> (x branch, z gate)
+        "conv_w": _init(ks[1], (4, din), scale=0.5),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "wq": _init(ks[2], (din, din)),
+        "wk": _init(ks[3], (din, din)),
+        "wv": _init(ks[4], (din, din)),
+        "wi": _init(ks[5], (din, nh), scale=0.02),
+        "bi": jnp.zeros((nh,), jnp.float32),
+        "wf": _init(ks[6], (din, nh), scale=0.02),
+        "bf": jnp.full((nh,), 3.0, jnp.float32),  # open forget gates at init
+        "out_norm": jnp.ones((din,), jnp.float32),
+        "down": _init(ks[7], (din, d)),
+    }
+
+
+def _mlstm_chunked(q, k, v, ilog, flog, chunk, init_state=None):
+    """q,k,v: (B,S,H,D); ilog/flog: (B,S,H) log-space gates.
+    Returns h (B,S,H,D) and the final (C, n, m) state."""
+    bsz, s, nh, dh = q.shape
+    qc = min(chunk, s)
+    assert s % qc == 0, (s, qc)
+    nc = s // qc
+    scale = 1.0 / np.sqrt(dh)
+
+    rs = lambda t: t.reshape(bsz, nc, qc, *t.shape[2:])
+    qch, kch, vch = rs(q), rs(k), rs(v)
+    ich, fch = rs(ilog), rs(flog)
+    fcs = jnp.cumsum(fch, axis=2)                        # F_t within chunk
+
+    # intra-chunk log decay: D~[t,u] = F_t - F_u + i~_u  (u <= t)
+    dlog = (fcs[:, :, :, None, :] - fcs[:, :, None, :, :]
+            + ich[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((qc, qc), bool))
+    dlog = jnp.where(tri[None, None, :, :, None], dlog, -jnp.inf)
+
+    def body(carry, inp):
+        c_prev, n_prev, m_prev = carry                   # (B,H,D,D),(B,H,D),(B,H)
+        qb, kb, vb, db, fcb, ib = inp
+        inter_log = fcb + m_prev[:, None, :]             # (B,qc,H)
+        m_t = jnp.maximum(jnp.max(db, axis=2), inter_log)
+        a = jnp.exp(db - m_t[:, :, None, :])             # (B,qc,qc,H)
+        qk = jnp.einsum("bthd,buhd->btuh", qb, kb,
+                        preferred_element_type=jnp.float32) * scale
+        s_mat = a * qk
+        numer = jnp.einsum("btuh,buhd->bthd", s_mat, vb,
+                           preferred_element_type=jnp.float32)
+        inter_w = jnp.exp(inter_log - m_t)               # (B,qc,H)
+        numer += inter_w[..., None] * jnp.einsum(
+            "bthd,bhde->bthe", qb * scale, c_prev,
+            preferred_element_type=jnp.float32)
+        denom = s_mat.sum(axis=2) + inter_w * jnp.einsum(
+            "bthd,bhd->bth", qb * scale, n_prev,
+            preferred_element_type=jnp.float32)
+        denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))
+        h = numer / denom[..., None]
+        # chunk-end state update
+        f_end = fcb[:, -1, :]                            # (B,H)
+        up_log = f_end[:, None, :] - fcb + ib            # (B,qc,H)
+        m_new = jnp.maximum(f_end + m_prev, jnp.max(up_log, axis=1))
+        w_up = jnp.exp(up_log - m_new[:, None, :])
+        decay = jnp.exp(f_end + m_prev - m_new)
+        c_new = (decay[..., None, None] * c_prev
+                 + jnp.einsum("buh,buhd,buhe->bhde", w_up, kb, vb,
+                              preferred_element_type=jnp.float32))
+        n_new = (decay[..., None] * n_prev
+                 + jnp.einsum("buh,buhd->bhd", w_up, kb,
+                              preferred_element_type=jnp.float32))
+        return (c_new, n_new, m_new), h
+
+    if init_state is None:
+        c0 = jnp.zeros((bsz, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((bsz, nh, dh), jnp.float32)
+        m0 = jnp.full((bsz, nh), LOG_EPS, jnp.float32)
+    else:
+        c0, n0, m0 = init_state
+
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    (c_f, n_f, m_f), hseq = jax.lax.scan(
+        body, (c0, n0, m0),
+        (mv(qch), mv(kch), mv(vch), mv(dlog), mv(fcs), mv(ich)))
+    h = jnp.moveaxis(hseq, 0, 1).reshape(bsz, s, nh, dh)
+    return h.astype(q.dtype), (c_f, n_f, m_f)
+
+
+def _mlstm_qkv(p, x, cfg: ModelConfig, conv_state=None):
+    """Shared projection path.  x: (B, S, d).  Returns q,k,v,ilog,flog,z and
+    the updated conv ring state (for decode)."""
+    bsz, s, _ = x.shape
+    d = cfg.d_model
+    din = 2 * d
+    nh = cfg.n_heads
+    dh = din // nh
+    u = x @ p["up"]
+    xb, z = u[..., :din], u[..., din:]
+    kw = p["conv_w"].shape[0]
+    if conv_state is None:
+        xp = jnp.pad(xb, ((0, 0), (kw - 1, 0), (0, 0)))
+        new_conv = None
+    else:
+        xp = jnp.concatenate([conv_state, xb], axis=1)
+        new_conv = xp[:, 1:]
+    xc = sum(xp[:, i:i + s] * p["conv_w"][i] for i in range(kw))
+    xc = jax.nn.silu(xc + p["conv_b"])
+    q = (xc @ p["wq"]).reshape(bsz, s, nh, dh)
+    k = (xc @ p["wk"]).reshape(bsz, s, nh, dh)
+    v = (xb @ p["wv"]).reshape(bsz, s, nh, dh)
+    ilog = (xc @ p["wi"] + p["bi"]).astype(jnp.float32)
+    flog = jax.nn.log_sigmoid((xc @ p["wf"] + p["bf"]).astype(jnp.float32))
+    return q, k, v, ilog, flog, z, new_conv
+
+
+def _mlstm_out(p, h, z, cfg: ModelConfig):
+    bsz, s = h.shape[:2]
+    din = 2 * cfg.d_model
+    y = h.reshape(bsz, s, din)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]
+         ).astype(h.dtype)
+    return (y * jax.nn.silu(z)) @ p["down"]
+
+
+def mlstm_apply(p, x, cfg: ModelConfig):
+    q, k, v, ilog, flog, z, _ = _mlstm_qkv(p, x, cfg)
+    h, _ = _mlstm_chunked(q, k, v, ilog, flog, cfg.mlstm_chunk)
+    return _mlstm_out(p, h, z, cfg)
+
+
+def mlstm_prefill(p, x, cfg: ModelConfig, state):
+    """Full-sequence mixer that also returns decode state (conv tail, C/n/m)."""
+    bsz, s, _ = x.shape
+    din = 2 * cfg.d_model
+    u = x @ p["up"]
+    xb = u[..., :din]
+    q, k, v, ilog, flog, z, _ = _mlstm_qkv(p, x, cfg)
+    h, (c, n, m) = _mlstm_chunked(q, k, v, ilog, flog, cfg.mlstm_chunk)
+    kw = p["conv_w"].shape[0]
+    tail = jnp.pad(xb, ((0, 0), (max(kw - 1 - s, 0), 0), (0, 0)))[:, -(kw - 1):]
+    new_state = {"conv": tail.astype(state["conv"].dtype),
+                 "c": c, "n": n, "m": m}
+    return _mlstm_out(p, h, z, cfg), new_state
+
+
+def mlstm_decode(p, x, cfg: ModelConfig, state):
+    """One-token decode.  state: dict(conv, c, n, m)."""
+    q, k, v, ilog, flog, z, new_conv = _mlstm_qkv(p, x, cfg,
+                                                  conv_state=state["conv"])
+    qb, kb, vb = q[:, 0], k[:, 0], v[:, 0]               # (B,H,D)
+    il, fl = ilog[:, 0], flog[:, 0]                      # (B,H)
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(fl + m, il)
+    decay = jnp.exp(fl + m - m_new)
+    inw = jnp.exp(il - m_new)
+    c = decay[..., None, None] * c + inw[..., None, None] * (
+        kb[..., :, None] * vb[..., None, :])
+    n = decay[..., None] * n + inw[..., None] * kb
+    scale = 1.0 / np.sqrt(qb.shape[-1])
+    numer = jnp.einsum("bhd,bhde->bhe", qb * scale, c)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qb * scale, n)),
+                        jnp.exp(-m_new))
+    h = (numer / denom[..., None])[:, None]              # (B,1,H,D)
+    out = _mlstm_out(p, h.astype(x.dtype), z, cfg)
+    return out, {"conv": new_conv, "c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = cfg.slstm_head_dim or d // nh
+    ks = jax.random.split(key, 10)
+    p = {"out_norm": jnp.ones((nh * dh,), jnp.float32),
+         "down": _init(ks[8], (nh * dh, d))}
+    for gi, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = _init(ks[gi], (d, nh * dh))
+        p[f"r{g}"] = _init(ks[4 + gi], (nh, dh, dh), scale=1.0 / np.sqrt(dh))
+        p[f"b{g}"] = (jnp.full((nh * dh,), 3.0, jnp.float32) if g == "f"
+                      else jnp.zeros((nh * dh,), jnp.float32))
+    return p
+
+
+def _slstm_cell(p, xg, state, nh, dh):
+    """One step.  xg: dict of per-gate input projections (B, nh, dh)."""
+    c, n, m, h = state
+
+    # ONE batched dot for all four recurrent gates (batch dim = head).
+    # Two prior forms were measured worse on train_4k (EXPERIMENTS §Perf
+    # X1/X2): einsum lowered to broadcast-mul-reduce (49 TB/step-group of
+    # outer products), and four separate dots still materialised backward
+    # outer products; the fused (nh, dh, 4*dh) dot gives XLA one dense
+    # contraction in both directions.
+    r_cat = jnp.concatenate([p[f"r{g}"] for g in "ifzo"], axis=-1)
+    ht = jnp.swapaxes(h, 0, 1)                           # (nh, B, dh)
+    rec_all = jax.lax.dot_general(
+        ht, r_cat, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (nh, B, 4*dh)
+    rec_all = jnp.swapaxes(rec_all, 0, 1)                # (B, nh, 4*dh)
+    rec = {g: rec_all[..., i * dh:(i + 1) * dh]
+           for i, g in enumerate("ifzo")}
+    il = xg["i"] + rec["i"]
+    fl = xg["f"] + rec["f"]
+    zv = jnp.tanh(xg["z"] + rec["z"])
+    ov = jax.nn.sigmoid(xg["o"] + rec["o"])
+    fl = jax.nn.log_sigmoid(fl)                          # stabilized f~
+    m_new = jnp.maximum(fl + m, il)
+    i_s = jnp.exp(il - m_new)
+    f_s = jnp.exp(fl + m - m_new)
+    c_new = f_s * c + i_s * zv
+    n_new = f_s * n + i_s
+    h_new = ov * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(p, x, cfg: ModelConfig):
+    bsz, s, d = x.shape
+    nh = cfg.n_heads
+    dh = (cfg.slstm_head_dim or d // nh)
+    xg = {g: (x @ p[f"w{g}"] + p[f"b{g}"]).reshape(bsz, s, nh, dh)
+          for g in "ifzo"}
+
+    def step(state, xs):
+        new = _slstm_cell(p, xs, state, nh, dh)
+        return new, new[3]
+
+    z0 = jnp.zeros((bsz, nh, dh), jnp.float32)
+    state0 = (z0, z0, jnp.full((bsz, nh, dh), LOG_EPS, jnp.float32), z0)
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    _, hseq = jax.lax.scan(step, state0, {g: mv(xg[g]) for g in "ifzo"})
+    h = jnp.moveaxis(hseq, 0, 1).reshape(bsz, s, nh * dh)
+    ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = (h * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]).astype(x.dtype)
+    return h @ p["down"]
+
+
+def slstm_prefill(p, x, cfg: ModelConfig, state):
+    """Full-sequence sLSTM that also returns the final recurrent state."""
+    bsz, s, d = x.shape
+    nh = cfg.n_heads
+    dh = (cfg.slstm_head_dim or d // nh)
+    xg = {g: (x @ p[f"w{g}"] + p[f"b{g}"]).reshape(bsz, s, nh, dh)
+          for g in "ifzo"}
+
+    def step(st, xs):
+        new = _slstm_cell(p, xs, st, nh, dh)
+        return new, new[3]
+
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    final, hseq = jax.lax.scan(step, state, {g: mv(xg[g]) for g in "ifzo"})
+    h = jnp.moveaxis(hseq, 0, 1).reshape(bsz, s, nh * dh)
+    ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = (h * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]).astype(x.dtype)
+    return h @ p["down"], final
+
+
+def slstm_decode(p, x, cfg: ModelConfig, state):
+    """One-token decode.  state: tuple (c, n, m, h)."""
+    bsz, _, d = x.shape
+    nh = cfg.n_heads
+    dh = (cfg.slstm_head_dim or d // nh)
+    xg = {g: (x[:, 0] @ p[f"w{g}"] + p[f"b{g}"]).reshape(bsz, nh, dh)
+          for g in "ifzo"}
+    new = _slstm_cell(p, xg, state, nh, dh)
+    h = new[3].reshape(bsz, 1, nh * dh)
+    ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = (h * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]).astype(x.dtype)
+    return h @ p["down"], new

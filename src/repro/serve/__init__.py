@@ -1,0 +1,2 @@
+"""repro.serve — prefill/decode engine with a batched request scheduler."""
+from .engine import ServeConfig, Engine

@@ -1,0 +1,136 @@
+"""Serving engine: jit'd prefill + decode steps and a slot-based batched
+request scheduler (continuous-batching-lite).
+
+The engine keeps a fixed batch of B slots.  Requests prefill into a free
+slot's cache region; every engine tick decodes one token for all active
+slots; finished slots (EOS or max tokens) are recycled.  Sampling is greedy
+or temperature-based with a deterministic per-slot PRNG.
+
+``decode_fn`` is exactly what the `decode_32k` / `long_500k` dry-run cells
+lower: one new token against a seq_len-deep cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 8
+    max_len: int = 1024
+    temperature: float = 0.0         # 0 => greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    active: bool = False
+    request_id: int = -1
+    position: int = 0
+    generated: Optional[list] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.cache = M.init_cache(cfg, scfg.batch_size, scfg.max_len,
+                                  jnp.dtype(cfg.dtype))
+        self.slots: List[_Slot] = [_Slot() for _ in range(scfg.batch_size)]
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self.finished: dict = {}
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def add_request(self, request_id: int, prompt: np.ndarray) -> bool:
+        """Prefill `prompt` into a free slot; False if engine is full."""
+        try:
+            slot_idx = next(i for i, s in enumerate(self.slots)
+                            if not s.active)
+        except StopIteration:
+            return False
+        # token-by-token prefill into this slot (batch-1 slice of the cache):
+        # simple and always correct; bulk prefill is used by the examples
+        # when the whole batch starts together.
+        for t, tok in enumerate(prompt[:-1]):
+            toks = np.zeros((self.scfg.batch_size,), np.int32)
+            toks[slot_idx] = tok
+            pos = np.full((self.scfg.batch_size,), -1_000_000, np.int32)
+            pos[slot_idx] = t
+            _, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                         self.cache, jnp.asarray(pos))
+        s = self.slots[slot_idx]
+        s.active = True
+        s.request_id = request_id
+        s.position = len(prompt) - 1
+        s.generated = [int(prompt[-1])]
+        return True
+
+    # -- engine tick -----------------------------------------------------
+
+    def step(self, max_new: int):
+        toks = np.zeros((self.scfg.batch_size,), np.int32)
+        pos = np.full((self.scfg.batch_size,), -1_000_000, np.int32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                toks[i] = s.generated[-1]
+                pos[i] = s.position
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                          self.cache, jnp.asarray(pos))
+        if self.scfg.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            nxt = jax.random.categorical(
+                sub, logits / self.scfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = np.asarray(nxt)
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            s.generated.append(int(nxt[i]))
+            s.position += 1
+            done = (len(s.generated) - 1 >= max_new
+                    or (self.scfg.eos_id is not None
+                        and nxt[i] == self.scfg.eos_id)
+                    or s.position >= self.scfg.max_len - 1)
+            if done:
+                self.finished[s.request_id] = list(s.generated)
+                s.active = False
+                s.generated = None
+
+    def run(self, requests, max_new: int = 32):
+        """Serve a list of (id, prompt ndarray); returns {id: tokens}."""
+        pending = list(requests)
+        while pending or any(s.active for s in self.slots):
+            while pending and self.add_request(*pending[0]):
+                pending.pop(0)
+            if any(s.active for s in self.slots):
+                self.step(max_new)
+        return self.finished
+
+
+def decode_fn(cfg: ModelConfig):
+    """(params, tokens, cache, position) -> (logits, cache') — the function
+    the decode dry-run cells lower."""
+    def fn(params, tokens, cache, position):
+        return M.decode_step(params, cfg, tokens, cache, position)
+    return fn
+
+
+def prefill_fn(cfg: ModelConfig):
+    def fn(params, batch, cache):
+        return M.prefill(params, cfg, tokens=batch.get("tokens"),
+                         embeds=batch.get("embeds"), cache=cache)
+    return fn

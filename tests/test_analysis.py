@@ -1,0 +1,89 @@
+"""HLO analyzer + roofline math + sharding-rule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hloparse
+from repro.analysis.roofline import HW, roofline_terms
+
+
+def test_loop_aware_flops_scale_with_trip_count():
+    def build(n):
+        w = jnp.zeros((256, 256))
+        def f(x):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            return jax.lax.scan(body, x, None, length=n)[0]
+        return jax.jit(f).lower(
+            jax.ShapeDtypeStruct((64, 256), jnp.float32)).compile()
+    f2 = hloparse.analyze(build(2).as_text()).flops
+    f8 = hloparse.analyze(build(8).as_text()).flops
+    assert 3.5 < f8 / f2 < 4.5                     # ~4x, not 1x
+    expect = 8 * 2 * 64 * 256 * 256
+    assert abs(f8 - expect) / expect < 0.05
+
+
+def test_nested_tuple_while_parsed():
+    """Nested carries (tuples of tuples) must not drop the while op."""
+    def f(x):
+        def body(carry, _):
+            (a, b), c = carry
+            return ((jnp.tanh(a @ b), b), c + 1.0), None
+        w = jnp.zeros((64, 64))
+        out, _ = jax.lax.scan(body, ((x, w), jnp.zeros(())), None, length=6)
+        return out[0][0]
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    flops = hloparse.analyze(c.as_text()).flops
+    expect = 6 * 2 * 64 * 64 * 64
+    assert abs(flops - expect) / expect < 0.1, flops
+
+
+def test_shape_bytes():
+    assert hloparse.shape_bytes("f32[128,512]{1,0}") == 128 * 512 * 4
+    assert hloparse.shape_bytes("bf16[4]") == 8
+    assert hloparse.shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+    assert hloparse.shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_math():
+    rec = {
+        "mesh": "16x16", "devices": 256, "dtype": "bfloat16",
+        "kind": "train", "global_batch": 256, "seq_len": 4096,
+        "n_active": 1_000_000_000,
+        "loop_aware": {"flops": 197e12, "traffic_bytes": 819e9,
+                       "collective_total": 50e9},
+    }
+    t = roofline_terms(rec)
+    assert abs(t["compute_s"] - 1.0) < 1e-6
+    assert abs(t["memory_s"] - 1.0) < 1e-6
+    assert abs(t["collective_s"] - 1.0) < 1e-6
+    model = 6 * 1e9 * 256 * 4096
+    assert abs(t["model_flops"] - model) < 1
+    assert t["chips"] == 256
+
+
+def test_sharding_fit_degrades():
+    from repro.launch.sharding import _fit
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    spec = _fit(("data", "model"), (32, 160), FakeMesh())
+    assert spec[0] == "data" and spec[1] == "model"
+    spec = _fit(("data", "model"), (30, 160), FakeMesh())
+    assert spec[0] is None                       # 30 % 16 != 0 -> dropped
+    spec = _fit((("data", "model"), None), (512, 7), FakeMesh())
+    assert spec[0] == ("data", "model")          # 512 % 256 == 0
+
+
+def test_skipped_cells_bookkeeping():
+    import repro.configs as C
+    assert len(C.SKIPPED_CELLS) == 8
+    assert len(C.all_cells()) == 32
+    assert len(C.all_cells(include_skipped=True)) == 40
+    archs = {a for a, _, _ in C.SKIPPED_CELLS}
+    assert "zamba2-2.7b" not in archs            # hybrid runs everything
+    assert "h2o-danube-1.8b" not in archs        # SWA makes long_500k legal

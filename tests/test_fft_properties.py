@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the FFT core's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (fft, ifft, rfft, irfft, fft2, from_complex,
+                        to_complex, fft_conv)
+from repro.core import complexmath as cm
+
+ALGOS = ["naive", "cooley_tukey", "cooley_tukey_fused", "stockham",
+         "four_step"]
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)) \
+        .astype(np.complex64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(logn=st.integers(1, 10), seed=st.integers(0, 2**20),
+       algo=st.sampled_from(ALGOS))
+def test_matches_numpy(logn, seed, algo):
+    n = 1 << logn
+    x = _rand((2, n), seed)
+    got = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)), algo=algo)))
+    ref = np.fft.fft(x)
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(got, ref, atol=5e-4 * scale, rtol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(logn=st.integers(1, 11), seed=st.integers(0, 2**20))
+def test_roundtrip(logn, seed):
+    n = 1 << logn
+    x = _rand((n,), seed)
+    z = from_complex(jnp.asarray(x))
+    back = np.asarray(to_complex(ifft(fft(z))))
+    np.testing.assert_allclose(back, x, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(logn=st.integers(2, 10), seed=st.integers(0, 2**20),
+       a=st.floats(-3, 3), b=st.floats(-3, 3))
+def test_linearity(logn, seed, a, b):
+    n = 1 << logn
+    x, y = _rand((n,), seed), _rand((n,), seed + 1)
+    fx = to_complex(fft(from_complex(jnp.asarray(x))))
+    fy = to_complex(fft(from_complex(jnp.asarray(y))))
+    fxy = to_complex(fft(from_complex(jnp.asarray(a * x + b * y))))
+    np.testing.assert_allclose(np.asarray(fxy), a * np.asarray(fx)
+                               + b * np.asarray(fy), atol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(logn=st.integers(1, 11), seed=st.integers(0, 2**20))
+def test_parseval(logn, seed):
+    n = 1 << logn
+    x = _rand((n,), seed)
+    fx = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
+    e_time = np.sum(np.abs(x) ** 2)
+    e_freq = np.sum(np.abs(fx) ** 2) / n
+    np.testing.assert_allclose(e_freq, e_time, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(3, 9), shift=st.integers(0, 63),
+       seed=st.integers(0, 2**20))
+def test_shift_theorem(logn, shift, seed):
+    n = 1 << logn
+    shift = shift % n
+    x = _rand((n,), seed)
+    fx = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
+    fxs = np.asarray(to_complex(fft(from_complex(
+        jnp.asarray(np.roll(x, -shift))))))
+    phase = np.exp(2j * np.pi * shift * np.arange(n) / n)
+    np.testing.assert_allclose(fxs, fx * phase, atol=5e-3 * max(
+        np.abs(fx).max(), 1.0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 600), seed=st.integers(0, 2**20))
+def test_arbitrary_length_bluestein(n, seed):
+    x = _rand((n,), seed)
+    got = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
+    ref = np.fft.fft(x)
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(got, ref, atol=2e-3 * scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(logn=st.integers(1, 10), seed=st.integers(0, 2**20))
+def test_rfft_hermitian_and_matches(logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((3, n)).astype(np.float32)
+    got = np.asarray(to_complex(rfft(jnp.asarray(x))))
+    ref = np.fft.rfft(x)
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(got, ref, atol=5e-4 * scale)
+    back = np.asarray(irfft(rfft(jnp.asarray(x))))
+    np.testing.assert_allclose(back, x, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(logl=st.integers(3, 8), k=st.integers(1, 16), seed=st.integers(0, 2**18))
+def test_fftconv_matches_direct(logl, k, seed):
+    L = 1 << logl
+    rng = np.random.default_rng(seed)
+    sig = rng.standard_normal((2, L)).astype(np.float32)
+    ker = rng.standard_normal((2, k)).astype(np.float32)
+    got = np.asarray(fft_conv(jnp.asarray(sig), jnp.asarray(ker)))
+    ref = np.stack([np.convolve(s, kk)[:L] for s, kk in zip(sig, ker)])
+    np.testing.assert_allclose(got, ref, atol=2e-3 * max(1.0, np.abs(ref).max()))
+
+
+def test_fft2_matches_numpy():
+    x = _rand((64, 128), 7)
+    got = np.asarray(to_complex(fft2(from_complex(jnp.asarray(x)))))
+    ref = np.fft.fft2(x)
+    np.testing.assert_allclose(got, ref, atol=1e-3 * np.abs(ref).max())
+
+
+def test_karatsuba_mul_matches():
+    a = from_complex(jnp.asarray(_rand((128,), 1)))
+    b = from_complex(jnp.asarray(_rand((128,), 2)))
+    m4 = cm.mul(a, b)
+    m3 = cm.mul3(a, b)
+    np.testing.assert_allclose(np.asarray(m3.re), np.asarray(m4.re), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m3.im), np.asarray(m4.im), atol=1e-4)

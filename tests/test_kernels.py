@@ -1,0 +1,104 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose against the
+ref.py jnp.fft oracle (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.complexmath import SplitComplex, from_complex, to_complex
+from repro.kernels import ops, ref
+from repro.kernels.fft_stockham import packed_twiddles_np
+
+
+def _rand(batch, n, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal((batch, n)) + 1j * rng.standard_normal((batch, n))
+    zc = z.astype(np.complex64)
+    return SplitComplex(jnp.asarray(zc.real, dtype), jnp.asarray(zc.imag, dtype))
+
+
+TOL = {jnp.float32: 3e-4, jnp.bfloat16: 6e-2}
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 512, 4096, 16384])
+@pytest.mark.parametrize("batch", [1, 5, 8])
+def test_stockham_kernel_shapes(n, batch):
+    x = _rand(batch, n, jnp.float32)
+    got = ops.fft_stockham(x)
+    want = ref.fft_ref(x)
+    r = np.asarray(to_complex(want))
+    scale = max(np.abs(r).max(), 1.0)
+    np.testing.assert_allclose(np.asarray(to_complex(got)), r,
+                               atol=3e-4 * scale)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stockham_kernel_dtypes(dtype):
+    x = _rand(4, 256, dtype)
+    got = ops.fft_stockham(x)
+    x32 = SplitComplex(x.re.astype(jnp.float32), x.im.astype(jnp.float32))
+    r = np.asarray(to_complex(ref.fft_ref(x32)))
+    scale = max(np.abs(r).max(), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(to_complex(got)).astype(np.complex64), r,
+        atol=TOL[dtype] * scale)
+
+
+@pytest.mark.parametrize("n", [64, 1024, 4096, 16384])
+def test_fourstep_kernel(n):
+    x = _rand(4, n, jnp.float32, seed=n)
+    got = ops.fft_fourstep(x)
+    r = np.asarray(to_complex(ref.fft_ref(x)))
+    scale = max(np.abs(r).max(), 1.0)
+    np.testing.assert_allclose(np.asarray(to_complex(got)), r,
+                               atol=5e-4 * scale)
+
+
+@pytest.mark.parametrize("n", [16, 256, 2048])
+def test_staged_kernel_paper_baseline(n):
+    x = _rand(4, n, jnp.float32, seed=n)
+    got = ops.fft_staged(x)
+    r = np.asarray(to_complex(ref.fft_ref(x)))
+    scale = max(np.abs(r).max(), 1.0)
+    np.testing.assert_allclose(np.asarray(to_complex(got)), r,
+                               atol=3e-4 * scale)
+
+
+@pytest.mark.parametrize("n", [256, 4096])
+def test_inverse_kernels(n):
+    x = _rand(4, n, jnp.float32, seed=n + 1)
+    fwd = ref.fft_ref(x)
+    for fn in (ops.fft_stockham, ops.fft_fourstep):
+        back = fn(fwd, inverse=True)
+        np.testing.assert_allclose(np.asarray(to_complex(back)),
+                                   np.asarray(to_complex(x)), atol=2e-3)
+
+
+def test_batch_padding_path():
+    """Non-multiple batch exercises the pad/unpad logic in ops."""
+    x = _rand(3, 128, jnp.float32)
+    got = ops.fft_stockham(x, block_batch=8)
+    r = np.asarray(to_complex(ref.fft_ref(x)))
+    np.testing.assert_allclose(np.asarray(to_complex(got)), r,
+                               atol=3e-4 * max(np.abs(r).max(), 1.0))
+
+
+def test_leading_dims_flatten():
+    rng = np.random.default_rng(0)
+    z = (rng.standard_normal((2, 3, 64)) + 1j * rng.standard_normal((2, 3, 64))
+         ).astype(np.complex64)
+    x = from_complex(jnp.asarray(z))
+    got = np.asarray(to_complex(ops.fft_stockham(x)))
+    ref_v = np.fft.fft(z)
+    np.testing.assert_allclose(got, ref_v, atol=3e-4 * np.abs(ref_v).max())
+
+
+def test_packed_twiddles_consistency():
+    wr, wi = packed_twiddles_np(64, False)
+    assert wr.shape == (6, 32)
+    # stage 0: stride 1, w_p = exp(-2pi i p/64)
+    p = np.arange(32)
+    np.testing.assert_allclose(wr[0], np.cos(-2 * np.pi * p / 64), atol=1e-12)
+    # last stage: all ones (n_cur=2)
+    np.testing.assert_allclose(wr[-1], np.ones(32), atol=1e-12)
+    np.testing.assert_allclose(wi[-1], np.zeros(32), atol=1e-12)

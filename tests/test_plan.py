@@ -1,0 +1,40 @@
+"""FFTPlan dispatch: algorithm auto-selection and the Pallas backend."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FFTPlan, from_complex, plan_fft, plan_ifft, to_complex
+
+
+def test_auto_algo_selection():
+    assert plan_fft(128).algo == "naive"
+    assert plan_fft(4096).algo == "four_step"
+    assert plan_fft(100).algo == "naive"
+    assert plan_fft(1000).algo == "bluestein"
+    assert plan_fft(1 << 21).algo == "stockham"
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("n", [512, 4096])
+def test_plan_executes(backend, n):
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((4, n)) + 1j * rng.standard_normal((4, n))) \
+        .astype(np.complex64)
+    plan = plan_fft(n, backend=backend)
+    got = np.asarray(to_complex(plan(from_complex(jnp.asarray(x)))))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(got, ref, atol=5e-4 * np.abs(ref).max())
+
+
+def test_inverse_plan_roundtrip():
+    rng = np.random.default_rng(1)
+    x = (rng.standard_normal((2, 1024)) + 1j * rng.standard_normal((2, 1024))) \
+        .astype(np.complex64)
+    z = from_complex(jnp.asarray(x))
+    back = plan_ifft(1024)(plan_fft(1024)(z))
+    np.testing.assert_allclose(np.asarray(to_complex(back)), x, atol=2e-3)
+
+
+def test_pallas_backend_falls_back_for_nonpow2():
+    plan = FFTPlan.create(1000, backend="pallas")
+    assert plan.backend == "jnp"            # bluestein has no kernel path

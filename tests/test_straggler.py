@@ -1,0 +1,53 @@
+"""Straggler mitigation logic: deterministic rebalancing + ejection."""
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.dist.straggler import rebalance, should_eject
+
+
+def test_rebalance_shifts_work_away_from_slow_host():
+    times = [1.0, 1.0, 1.0, 3.0]          # host 3 is 3x slower
+    a = rebalance(times, 16)
+    assert sum(a) == 16
+    assert a[3] < a[0]
+    assert a[3] >= 1
+
+
+def test_rebalance_uniform_when_equal():
+    a = rebalance([2.0] * 8, 32)
+    assert a == [4] * 8
+
+
+def test_rebalance_deterministic():
+    times = [1.1, 0.9, 2.0, 1.0, 1.3]
+    assert rebalance(times, 23) == rebalance(times, 23)
+
+
+def test_rebalance_smoothing_uses_previous():
+    times = [1.0, 1.0, 1.0, 10.0]
+    prev = [4, 4, 4, 4]
+    a_smooth = rebalance(times, 16, smoothing=0.1, prev_assignment=prev)
+    a_sharp = rebalance(times, 16, smoothing=1.0)
+    assert a_smooth[3] >= a_sharp[3]       # smoothing damps the swing
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 16), seed=st.integers(0, 1000),
+       mult=st.integers(2, 8))
+def test_rebalance_invariants(n, seed, mult):
+    rng = np.random.default_rng(seed)
+    times = (0.5 + rng.random(n) * 3).tolist()
+    total = n * mult
+    a = rebalance(times, total)
+    assert sum(a) == total
+    assert min(a) >= 1
+    # slowest host never gets more than the fastest
+    assert a[int(np.argmax(times))] <= a[int(np.argmin(times))]
+
+
+def test_should_eject():
+    idx, med = should_eject([1.0, 1.1, 0.9, 5.0], eject_threshold=3.0)
+    assert idx == [3]
+    idx, _ = should_eject([1.0, 1.1, 0.9, 1.2], eject_threshold=3.0)
+    assert idx == []
