@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: timing, CSV emission, FLOP math."""
+"""Shared benchmark utilities: timing, CSV emission, JSON sinks, FLOP math."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -21,10 +23,49 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def time_fn_pair(fn_a, fn_b, *args, warmup: int = 2, iters: int = 7):
+    """Interleaved A/B timing (us, us): alternating samples cancel the
+    machine-load drift that two sequential time_fn passes pick up — use for
+    any ratio that gates an acceptance criterion."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta) * 1e6), float(np.median(tb) * 1e6)
+
+
 def fft_flops(n: int, batch: int = 1) -> float:
     """Canonical 5 N log2 N real-op count for a complex FFT."""
     return 5.0 * n * np.log2(n) * batch
 
 
-def emit(name: str, us: float, derived: str):
+def emit(name: str, us: float, derived: str, sink: dict = None):
     print(f"{name},{us:.1f},{derived}")
+    if sink is not None:
+        # store unrounded: ratio rows (e.g. acceptance-gating speedups) go
+        # through this sink too, and 1.26 vs 1.34 must stay distinguishable
+        sink[name] = {"us": float(us), "derived": derived}
+
+
+def write_json(path: str, section: str, payload: dict):
+    """Merge `payload` under `section` into the JSON file at `path` (so
+    table3 and table4 can share one BENCH_fft2d.json)."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                data = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data[section] = payload
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {section} -> {path}")

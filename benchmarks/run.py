@@ -4,8 +4,10 @@ import sys
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import table1_fft_variants, table2_ablation, table3_fft2d
-    for mod in (table1_fft_variants, table2_ablation, table3_fft2d):
+    from . import (table1_fft_variants, table2_ablation, table3_fft2d,
+                   table4_plan_autotune)
+    for mod in (table1_fft_variants, table2_ablation, table3_fft2d,
+                table4_plan_autotune):
         try:
             mod.run()
         except Exception as ex:                          # pragma: no cover

@@ -1,0 +1,59 @@
+"""Table 4 (beyond-paper) — plan-registry autotuning: tuned vs default.
+
+FFTW's central lesson (and *Parallel FFTW on RISC-V*, Strack et al. 2025):
+measured plans beat heuristic dispatch, and the measurement cost amortises
+because plans are cached.  For each (shape, backend) below we time the
+default heuristic plan and the ``tune=True`` winner on the same batch, and
+report the candidate table the tuner measured.  Rows land in
+BENCH_fft2d.json (section "table4").
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import clear_plan_cache, get_plan
+from repro.core.complexmath import SplitComplex
+from .common import emit, time_fn_pair, write_json
+
+BENCH_JSON = "BENCH_fft2d.json"
+
+CASES = [
+    ((1024,), "jnp", 64),
+    ((4096,), "jnp", 16),
+    ((1024,), "pallas", 64),
+    ((256, 256), "pallas", 4),
+]
+
+
+def run():
+    sink = {}
+    rng = np.random.default_rng(0)
+    for shape, backend, batch in CASES:
+        shp = (batch,) + shape
+        x = SplitComplex(jnp.asarray(rng.standard_normal(shp), jnp.float32),
+                         jnp.asarray(rng.standard_normal(shp), jnp.float32))
+        name = "x".join(map(str, shape))
+
+        clear_plan_cache()                    # measure cold heuristic plan
+        default = get_plan(shape, backend=backend)
+        tuned = get_plan(shape, backend=backend, tune=True, tune_batch=batch)
+        us_default, us_tuned = time_fn_pair(
+            jax.jit(lambda q, p=default: p(q)),
+            jax.jit(lambda q, p=tuned: p(q)), x)
+
+        cfg_d = f"{default.algo}/r{default.radix}/bb{default.block_batch}"
+        cfg_t = f"{tuned.algo}/r{tuned.radix}/bb{tuned.block_batch}"
+        emit(f"table4/{name}_{backend}_default", us_default,
+             f"batch={batch};plan={cfg_d}", sink)
+        # "|"-joined pairs keep the CSV's third column comma-free
+        report = "|".join(f"{k}={v}" for k, v in tuned.tune_report.items())
+        emit(f"table4/{name}_{backend}_tuned", us_tuned,
+             f"batch={batch};plan={cfg_t};candidates={report}", sink)
+        emit(f"table4/{name}_{backend}_tuned_speedup",
+             us_default / us_tuned, "ratio(default/tuned)", sink)
+
+    clear_plan_cache()                        # leave no tuned state behind
+    write_json(BENCH_JSON, "table4", sink)
+    return sink

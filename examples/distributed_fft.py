@@ -19,6 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core.complexmath import SplitComplex, from_complex, to_complex  # noqa: E402
 from repro.dist import pencil                            # noqa: E402
+from repro.launch.mesh import make_mesh                  # noqa: E402
 
 
 def main():
@@ -28,8 +29,7 @@ def main():
          + 1j * rng.standard_normal((H, W))).astype(np.complex64)
     ref = np.fft.fft2(x)
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     sh = NamedSharding(mesh, P("data", None))
     z = from_complex(jnp.asarray(x))
     z = SplitComplex(jax.device_put(z.re, sh), jax.device_put(z.im, sh))
@@ -42,8 +42,7 @@ def main():
     err = np.abs(np.asarray(to_complex(out)).T - ref).max() / np.abs(ref).max()
     print(f"pfft2 (4-chunk overlap schedule) rel err {err:.2e}")
 
-    mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 4), ("pod", "data"))
     sh2 = NamedSharding(mesh2, P(("pod", "data"), None))
     z2 = SplitComplex(jax.device_put(jnp.real(jnp.asarray(x)), sh2),
                       jax.device_put(jnp.imag(jnp.asarray(x)), sh2))
@@ -55,8 +54,7 @@ def main():
     n = 1 << 16
     v = (rng.standard_normal(n) + 1j * rng.standard_normal(n)) \
         .astype(np.complex64)
-    mesh1 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh1 = make_mesh((8,), ("data",))
     sh1 = NamedSharding(mesh1, P("data"))
     vz = from_complex(jnp.asarray(v))
     vz = SplitComplex(jax.device_put(vz.re, sh1), jax.device_put(vz.im, sh1))

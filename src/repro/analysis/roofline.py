@@ -30,6 +30,49 @@ HW = {
 }
 
 
+def fft2d_traffic_bytes(h: int, w: int, *, elem_bytes: int = 8,
+                        fused: bool = False) -> float:
+    """Modelled HBM traffic of one (h, w) split-complex 2-D FFT.
+
+    One "plane" is the full split-complex image (re+im), h*w*elem_bytes with
+    elem_bytes=8 for float32 re+im.  The row-column path streams the plane
+    through HBM three times — row pass (read+write), global transpose
+    (read+write, the paper's §5 bottleneck), column pass (read+write) — plus
+    the second output transpose: 8 plane-traversals.  The fused kernel keeps
+    each tile VMEM-resident through both passes and the tile transpose, so
+    HBM sees exactly one read and one write: 2 traversals, a 4x traffic
+    reduction.  (Per-stage butterfly traffic is VMEM-side in both cases and
+    excluded here; this term is the memory-roofline numerator for
+    :mod:`benchmarks.table3_fft2d`.)
+    """
+    plane = float(h) * float(w) * float(elem_bytes)
+    if fused:
+        return 2.0 * plane                       # one HBM read + one write
+    return 8.0 * plane                           # rows r/w, T r/w, cols r/w, T r/w
+
+
+def fft2d_roofline(h: int, w: int, *, elem_bytes: int = 8,
+                   fused: bool = False, flops: Optional[float] = None) -> dict:
+    """Roofline terms for the 2-D FFT under the traffic model above."""
+    import math
+    n = h * w
+    if flops is None:
+        flops = 5.0 * n * math.log2(n)           # canonical 5 N log2 N
+    traffic = fft2d_traffic_bytes(h, w, elem_bytes=elem_bytes, fused=fused)
+    compute_s = flops / HW["peak_flops_f32"]
+    memory_s = traffic / HW["hbm_bw"]
+    step_s = max(compute_s, memory_s)
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "step_s": step_s,
+        "dominant": "memory_s" if memory_s >= compute_s else "compute_s",
+        "energy_j": step_s * HW["chip_power_w"],
+    }
+
+
 def roofline_terms(rec: dict) -> Optional[dict]:
     la = rec.get("loop_aware") or {}
     if "flops" not in la:

@@ -182,37 +182,142 @@ def fft_cooley_tukey(x: SplitComplex, *, inverse: bool = False,
 # Stockham autosort
 # ---------------------------------------------------------------------------
 
-def fft_stockham(x: SplitComplex, *, inverse: bool = False) -> SplitComplex:
-    """Radix-2 DIF Stockham: autosorting, gather-free, contiguous accesses.
+def stockham_stages(re, im, wr, wi, n: int, radices, *, inverse: bool = False):
+    """Run every mixed-radix Stockham stage on (..., n) planes; returns (re, im).
 
-    Stage invariant: view the length-N axis as (p, q) of shape
-    (n_cur, stride); butterflies combine the contiguous halves p < m and
-    p >= m (m = n_cur/2) and write interleaved — the permutation the paper
-    pays two explicit copies for is absorbed into the write pattern, and
-    (unlike the paper's fused variant, §4) every access stays contiguous.
+    The workhorse shared by the jnp path (:func:`fft_stockham`), the 1-D
+    Pallas kernel (:mod:`repro.kernels.fft_stockham`) and the fused 2-D
+    kernel (:mod:`repro.kernels.fft2d_fused`) — inside a kernel the planes
+    are VMEM-resident values, here they are ordinary arrays; the arithmetic
+    is identical.
+
+    Stage invariant: the length-n axis viewed as (n_cur, stride) is row-major
+    contiguous, so the radix-r sub-sequences p, p+m, .. are r contiguous flat
+    slices of constant length n/r, and the stride-broadcast packed twiddles
+    (``wr``/``wi`` of shape (s4, 3, n//4), see
+    :func:`repro.core.twiddle.packed_radix4_twiddles_np`) line up
+    element-wise.  Writes interleave as (m, r, stride) — the autosort store.
+    The radix-2 tail runs last (m == 1), where its twiddle is identically 1.
+    """
+    batch = re.shape[:-1]
+    q = n // 4
+    s4 = 0
+    for radix in radices:
+        if radix == 4:
+            a0r, a1r = re[..., 0 * q:1 * q], re[..., 1 * q:2 * q]
+            a2r, a3r = re[..., 2 * q:3 * q], re[..., 3 * q:4 * q]
+            a0i, a1i = im[..., 0 * q:1 * q], im[..., 1 * q:2 * q]
+            a2i, a3i = im[..., 2 * q:3 * q], im[..., 3 * q:4 * q]
+            # radix-4 butterfly: y0..y3 with the +-1/+-i combination matrix
+            e0r, e0i = a0r + a2r, a0i + a2i            # a0 + a2
+            d0r, d0i = a0r - a2r, a0i - a2i            # a0 - a2
+            e1r, e1i = a1r + a3r, a1i + a3i            # a1 + a3
+            d1r, d1i = a1r - a3r, a1i - a3i            # a1 - a3
+            y0r, y0i = e0r + e1r, e0i + e1i
+            y2r, y2i = e0r - e1r, e0i - e1i
+            if inverse:                                # +i (a1 - a3)
+                y1r, y1i = d0r - d1i, d0i + d1r
+                y3r, y3i = d0r + d1i, d0i - d1r
+            else:                                      # -i (a1 - a3)
+                y1r, y1i = d0r + d1i, d0i - d1r
+                y3r, y3i = d0r - d1i, d0i + d1r
+            w1r, w1i = wr[s4, 0], wi[s4, 0]
+            w2r, w2i = wr[s4, 1], wi[s4, 1]
+            w3r, w3i = wr[s4, 2], wi[s4, 2]
+            b1r = y1r * w1r - y1i * w1i
+            b1i = y1r * w1i + y1i * w1r
+            b2r = y2r * w2r - y2i * w2i
+            b2i = y2r * w2i + y2i * w2r
+            b3r = y3r * w3r - y3i * w3i
+            b3i = y3r * w3i + y3i * w3r
+            stride = 4 ** s4                           # n_cur = n / 4^s4
+            m = q // stride                            # m * stride == n // 4
+            re = jnp.stack([y0r.reshape(*batch, m, stride),
+                            b1r.reshape(*batch, m, stride),
+                            b2r.reshape(*batch, m, stride),
+                            b3r.reshape(*batch, m, stride)],
+                           axis=-2).reshape(*batch, n)
+            im = jnp.stack([y0i.reshape(*batch, m, stride),
+                            b1i.reshape(*batch, m, stride),
+                            b2i.reshape(*batch, m, stride),
+                            b3i.reshape(*batch, m, stride)],
+                           axis=-2).reshape(*batch, n)
+            s4 += 1
+        else:                                          # radix-2 tail, m == 1
+            h = n // 2
+            ar, ai = re[..., :h], im[..., :h]
+            br, bi = re[..., h:], im[..., h:]
+            re = jnp.stack([ar + br, ar - br], axis=-2).reshape(*batch, n)
+            im = jnp.stack([ai + bi, ai - bi], axis=-2).reshape(*batch, n)
+    return re, im
+
+
+def fft_stockham(x: SplitComplex, *, inverse: bool = False) -> SplitComplex:
+    """Mixed radix-4/radix-2 DIF Stockham: autosorting, gather-free.
+
+    Radix-4 stages (radix-2 tail for odd log2 N) halve the stage count and
+    inter-stage traffic versus the radix-2 version; the permutation the paper
+    pays two explicit copies for stays absorbed into the write pattern, and
+    every access remains a contiguous block slice.  Twiddles come from the
+    packed (s4, 3, N/4) table shared with the Pallas kernels — one host
+    build per (N, direction), no per-stage table requests.
     """
     n = x.shape[-1]
     assert _is_pow2(n), f"Stockham needs power-of-two length, got {n}"
     if n == 1:
         return x
-    batch = x.shape[:-1]
-    re, im = x.re, x.im
-    n_cur, stride = n, 1
-    while n_cur > 1:
-        m = n_cur // 2
-        re2 = re.reshape(*batch, n_cur, stride)
-        im2 = im.reshape(*batch, n_cur, stride)
-        ar, ai = re2[..., :m, :], im2[..., :m, :]
-        br, bi = re2[..., m:, :], im2[..., m:, :]
-        w = tw.twiddles(n_cur, inverse=inverse, dtype=x.dtype)
-        wr = w.re[:m, None]
-        wi = w.im[:m, None]
+    wr_np, wi_np = tw.packed_radix4_twiddles_np(n, inverse)
+    wr = jnp.asarray(wr_np, x.dtype)
+    wi = jnp.asarray(wi_np, x.dtype)
+    re, im = stockham_stages(x.re, x.im, wr, wi, n,
+                             tw.stockham_radices(n), inverse=inverse)
+    out = SplitComplex(re, im)
+    return cm.scale(out, 1.0 / n) if inverse else out
+
+
+def stockham_radix2_stages(re, im, wr, wi, n: int):
+    """Run every pure radix-2 Stockham stage on (..., n) planes.
+
+    The radix-2 twin of :func:`stockham_stages`, shared by
+    :func:`fft_stockham_radix2` and the kernel's ``radix=2`` path so the
+    oracle arithmetic is maintained in exactly one place.  ``wr``/``wi`` is
+    the packed (stages, n/2) table from
+    :func:`repro.core.twiddle.packed_radix2_twiddles_np`.
+    """
+    batch = re.shape[:-1]
+    h = n // 2
+    for s in range(_log2(n)):
+        stride = 1 << s
+        m = n >> (s + 1)
+        ar, ai = re[..., :h], im[..., :h]          # contiguous halves
+        br, bi = re[..., h:], im[..., h:]
         sr, si = ar - br, ai - bi                  # a - b
-        tr = sr * wr - si * wi                     # (a-b) * w
-        ti = sr * wi + si * wr
-        re = jnp.stack([ar + br, tr], axis=-2).reshape(*batch, n)
-        im = jnp.stack([ai + bi, ti], axis=-2).reshape(*batch, n)
-        n_cur, stride = m, stride * 2
+        tr = sr * wr[s] - si * wi[s]               # (a-b) * w
+        ti = sr * wi[s] + si * wr[s]
+        re = jnp.stack([(ar + br).reshape(*batch, m, stride),
+                        tr.reshape(*batch, m, stride)],
+                       axis=-2).reshape(*batch, n)
+        im = jnp.stack([(ai + bi).reshape(*batch, m, stride),
+                        ti.reshape(*batch, m, stride)],
+                       axis=-2).reshape(*batch, n)
+    return re, im
+
+
+def fft_stockham_radix2(x: SplitComplex, *,
+                        inverse: bool = False) -> SplitComplex:
+    """Pure radix-2 DIF Stockham — kept as the bit-identical-shape oracle for
+    the radix-4 path and as an autotune candidate (``algo="stockham2"``).
+    Uses the same packed-table scheme as the kernels (one host build per
+    (N, direction)) instead of a fresh ``twiddles(n_cur)`` request per stage.
+    """
+    n = x.shape[-1]
+    assert _is_pow2(n), f"Stockham needs power-of-two length, got {n}"
+    if n == 1:
+        return x
+    wr_np, wi_np = tw.packed_radix2_twiddles_np(n, inverse)
+    re, im = stockham_radix2_stages(x.re, x.im,
+                                    jnp.asarray(wr_np, x.dtype),
+                                    jnp.asarray(wi_np, x.dtype), n)
     out = SplitComplex(re, im)
     return cm.scale(out, 1.0 / n) if inverse else out
 
@@ -329,28 +434,40 @@ _ALGOS = {
     "cooley_tukey_fused": functools.partial(fft_cooley_tukey,
                                             variant="one_reorder"),
     "stockham": fft_stockham,
+    "stockham2": fft_stockham_radix2,
     "four_step": fft_four_step,
     "bluestein": fft_bluestein,
 }
+
+
+def resolve_algo(n: int) -> str:
+    """The single auto-dispatch size table: dense matmul for tiny N,
+    four-step (MXU) for power-of-two N up to 2^20, Stockham beyond,
+    Bluestein for non-pow2.  Shared by :func:`fft` and
+    :meth:`repro.core.plan.FFTPlan.create` (previously two drifting copies).
+    """
+    if not _is_pow2(n):
+        return "naive" if n <= 512 else "bluestein"
+    if n <= 256:
+        return "naive"
+    if n <= (1 << 20):
+        return "four_step"
+    return "stockham"
 
 
 def fft(x: SplitComplex, *, inverse: bool = False,
         algo: str = "auto") -> SplitComplex:
     """Forward/inverse DFT along the last axis.
 
-    algo="auto" picks: dense matmul for tiny N, four-step (MXU) for
-    power-of-two N up to 2^20, Stockham beyond, Bluestein for non-pow2.
+    algo="auto" routes through the plan registry (:mod:`repro.core.plan`):
+    the (shape, dtype, direction, backend="jnp") key resolves — and possibly
+    autotunes — once, then every later call reuses the cached plan.  An
+    explicit algo bypasses the registry and dispatches directly.
     """
-    n = x.shape[-1]
     if algo == "auto":
-        if not _is_pow2(n):
-            algo = "naive" if n <= 512 else "bluestein"
-        elif n <= 256:
-            algo = "naive"
-        elif n <= (1 << 20):
-            algo = "four_step"
-        else:
-            algo = "stockham"
+        from . import plan as _plan            # deferred: plan imports fft1d
+        return _plan.get_plan((x.shape[-1],), dtype=x.dtype,
+                              inverse=inverse, backend="jnp")(x)
     return _ALGOS[algo](x, inverse=inverse)
 
 

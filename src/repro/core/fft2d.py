@@ -1,9 +1,20 @@
 """Single-device 2-D / 3-D FFTs (the paper's Section 5 workload, one chip).
 
-Row-column decomposition: FFT the last axis, transpose, FFT again.  The
-explicit transpose mirrors the paper's global transpose between the two 1-D
-passes; on one device XLA lowers it to an in-HBM relayout.  The distributed
-version (all_to_all pencil transpose) lives in :mod:`repro.dist.pencil`.
+Two execution paths behind the plan registry's ``backend`` switch:
+
+- ``backend="jnp"`` — row-column decomposition: FFT the last axis, global
+  transpose, FFT again.  The explicit transpose mirrors the paper's global
+  transpose between the two 1-D passes; XLA lowers it to an in-HBM relayout.
+- ``backend="pallas"`` — the fused transpose-free kernel
+  (:mod:`repro.kernels.fft2d_fused`): row FFT, in-VMEM tile transpose and
+  column FFT all happen inside one kernel, so the global transpose never
+  round-trips through HBM (``algo="fused"``).  ``algo="row_col"`` keeps the
+  transpose-based two-kernel pipeline as the measured baseline.
+
+``fft2`` with ``algo="auto"`` routes through :func:`repro.core.plan.get_plan`
+so the (shape, dtype, direction, backend) decision — and any autotune result
+— is resolved once and reused.  The distributed version (all_to_all pencil
+transpose) lives in :mod:`repro.dist.pencil`.
 """
 from __future__ import annotations
 
@@ -18,13 +29,49 @@ def _swap(x: SplitComplex, a: int, b: int) -> SplitComplex:
     return SplitComplex(jnp.swapaxes(x.re, a, b), jnp.swapaxes(x.im, a, b))
 
 
-def fft2(x: SplitComplex, *, inverse: bool = False,
-         algo: str = "auto") -> SplitComplex:
-    """2-D FFT over the last two axes: rows, transpose, rows, transpose."""
-    y = fft1d.fft(x, inverse=inverse, algo=algo)       # FFT each row
+def _fft2_direct(x: SplitComplex, *, inverse: bool = False,
+                 algo: str = "auto", backend: str = "jnp",
+                 block_batch: int = None) -> SplitComplex:
+    """Execute a resolved 2-D plan config (no registry lookup).
+
+    ``block_batch`` means images-per-tile for the fused kernel and the 1-D
+    kernel's row tile for the row_col baseline (defaults 1 and 8).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        if algo not in ("auto", "fused", "row_col"):
+            raise ValueError(f'algo={algo!r} has no pallas 2-D path; use '
+                             '"fused" or "row_col" (or backend="jnp")')
+        if algo in ("auto", "fused"):
+            return kops.fft2d_fused(x, inverse=inverse,
+                                    block_batch=block_batch or 1)
+        # transpose-based baseline on the same backend: two 1-D kernel
+        # passes with an explicit global (HBM) transpose between them
+        bb = block_batch or 8
+        y = kops.fft_stockham(x, inverse=inverse, block_batch=bb)
+        y = _swap(y, -1, -2)
+        y = kops.fft_stockham(y, inverse=inverse, block_batch=bb)
+        return _swap(y, -1, -2)
+    if algo == "fused":
+        raise ValueError('algo="fused" requires backend="pallas" '
+                         '(the fused kernel has no jnp equivalent)')
+    row_algo = "auto" if algo in ("auto", "row_col") else algo
+    y = fft1d.fft(x, inverse=inverse, algo=row_algo)   # FFT each row
     y = _swap(y, -1, -2)                               # global transpose
-    y = fft1d.fft(y, inverse=inverse, algo=algo)       # FFT each column
+    y = fft1d.fft(y, inverse=inverse, algo=row_algo)   # FFT each column
     return _swap(y, -1, -2)
+
+
+def fft2(x: SplitComplex, *, inverse: bool = False, algo: str = "auto",
+         backend: str = "jnp") -> SplitComplex:
+    """2-D FFT over the last two axes, routed through the plan registry."""
+    if len(x.shape) < 2:
+        raise ValueError(f"fft2 needs at least 2 axes, got shape {x.shape}")
+    if algo == "auto":
+        from . import plan as _plan
+        return _plan.get_plan(x.shape[-2:], dtype=x.dtype, inverse=inverse,
+                              backend=backend)(x)
+    return _fft2_direct(x, inverse=inverse, algo=algo, backend=backend)
 
 
 def fft3(x: SplitComplex, *, inverse: bool = False,

@@ -2,7 +2,10 @@
 
 The LM-integration point of the paper's technique (DESIGN.md §4): SSM/hybrid
 mixers evaluate their long-convolution view through the FFT library instead
-of a direct O(L*K) conv.  Built entirely from :mod:`repro.core.fft1d`.
+of a direct O(L*K) conv.  Built entirely from :mod:`repro.core.fft1d`; with
+``algo="auto"`` every rfft/irfft below routes through the plan registry
+(the packed half-size complex transform of length m/2 is the cached key),
+so repeated convolutions at one length reuse a single resolved plan.
 """
 from __future__ import annotations
 

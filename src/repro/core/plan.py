@@ -1,58 +1,298 @@
-"""FFTW-style plans: choose an algorithm/kernel once, apply many times.
+"""FFTW-style plan registry: resolve/tune once, apply many times.
 
-A :class:`FFTPlan` captures (length, dtype, direction, backend) and exposes a
-jit-friendly ``__call__``.  ``backend="jnp"`` uses the pure-JAX algorithms in
-:mod:`repro.core.fft1d`; ``backend="pallas"`` dispatches to the TPU kernels in
-:mod:`repro.kernels.ops` (interpret-mode on CPU).  Mirrors how the paper bakes
-per-size decisions (chunking, reorder plan, twiddles) at initialisation.
+A :class:`FFTPlan` captures a transform (shape, dtype, direction, backend)
+plus the resolved execution config (algo, radix, block_batch) and exposes a
+jit-friendly ``__call__``.  Plans are interned in a process-wide registry —
+two requests with the same (shape, dtype, direction, backend) return the
+*same object* — so auto-dispatch decisions (and autotune measurements) are
+paid once per key, mirroring how the paper bakes per-size decisions
+(chunking, reorder plan, twiddles) at initialisation and how FFTW separates
+``plan`` from ``execute``.
+
+``backend="jnp"`` uses the pure-JAX algorithms in :mod:`repro.core.fft1d`;
+``backend="pallas"`` dispatches to the TPU kernels in
+:mod:`repro.kernels.ops` (interpret-mode on CPU).  1-D shapes are ``(n,)``;
+2-D shapes ``(h, w)`` cover :func:`repro.core.fft2d.fft2`, where the pallas
+backend runs the fused transpose-free kernel
+(:mod:`repro.kernels.fft2d_fused`).
+
+``tune=True`` runs an opt-in FFTW-style measuring autotuner: every candidate
+(algo, radix, block_batch) config is timed on synthetic data and the winner
+is recorded in the registry, so the measurement also happens at most once
+per key.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Dict, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .complexmath import SplitComplex
 from . import fft1d
+from .fft1d import resolve_algo
 
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
+PlanKey = Tuple[Tuple[int, ...], str, bool, str]
+
+_PLAN_CACHE: Dict[PlanKey, "FFTPlan"] = {}      # algo="auto" plans
+_OVERRIDE_CACHE: Dict[tuple, "FFTPlan"] = {}    # (key, algo, radix) overrides
+_AUTOTUNE_RUNS: Dict[tuple, int] = {}
+
+
+def _plan_key(shape, dtype, inverse, backend) -> PlanKey:
+    return (tuple(int(d) for d in shape), str(jnp.dtype(dtype)),
+            bool(inverse), backend)
+
+
 @dataclasses.dataclass(frozen=True)
 class FFTPlan:
-    n: int
+    shape: Tuple[int, ...]            # transform shape: (n,) or (h, w)
+    dtype: str = "float32"
     inverse: bool = False
-    algo: str = "auto"            # resolved at construction
-    backend: str = "jnp"          # "jnp" | "pallas"
+    algo: str = "auto"                # resolved at construction, never "auto"
+    backend: str = "jnp"              # "jnp" | "pallas"
+    radix: int = 4                    # Stockham radix (4 = mixed 4/2, 2 = oracle)
+    block_batch: int = 8              # pallas batch tile
+    tuned: bool = False
+    tune_report: Optional[dict] = None   # {candidate label: us} when tuned
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    # -- construction --------------------------------------------------------
 
     @staticmethod
     def create(n: int, *, inverse: bool = False, algo: str = "auto",
-               backend: str = "jnp") -> "FFTPlan":
-        if algo == "auto":
-            if not _is_pow2(n):
-                algo = "naive" if n <= 512 else "bluestein"
-            elif n <= 256:
-                algo = "naive"
-            elif n <= (1 << 20):
-                algo = "four_step"
-            else:
-                algo = "stockham"
-        if backend == "pallas" and algo in ("naive", "bluestein"):
-            backend = "jnp"       # no kernel for these paths
-        return FFTPlan(n=n, inverse=inverse, algo=algo, backend=backend)
+               backend: str = "jnp", dtype=jnp.float32,
+               tune: bool = False) -> "FFTPlan":
+        """1-D plan through the registry (kept as the historical entry point)."""
+        return get_plan((n,), dtype=dtype, inverse=inverse, algo=algo,
+                        backend=backend, tune=tune)
 
-    def __call__(self, x: SplitComplex) -> SplitComplex:
-        assert x.shape[-1] == self.n, (x.shape, self.n)
+    # -- execution -----------------------------------------------------------
+
+    def __call__(self, x) -> SplitComplex:
+        assert x.shape[-self.ndim:] == self.shape, (x.shape, self.shape)
+        if self.ndim == 2:
+            from . import fft2d
+            return fft2d._fft2_direct(x, inverse=self.inverse, algo=self.algo,
+                                      backend=self.backend,
+                                      block_batch=self.block_batch)
         if self.backend == "pallas":
             from repro.kernels import ops as kops
             if self.algo == "four_step":
-                return kops.fft_fourstep(x, inverse=self.inverse)
-            return kops.fft_stockham(x, inverse=self.inverse)
-        return fft1d.fft(x, inverse=self.inverse, algo=self.algo)
+                return kops.fft_fourstep(x, inverse=self.inverse,
+                                         block_batch=self.block_batch)
+            return kops.fft_stockham(x, inverse=self.inverse,
+                                     radix=self.radix,
+                                     block_batch=self.block_batch)
+        algo = "stockham2" if (self.algo == "stockham" and self.radix == 2) \
+            else self.algo
+        return fft1d.fft(x, inverse=self.inverse, algo=algo)
 
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
+             algo: str = "auto", backend: str = "jnp",
+             tune: bool = False, tune_batch: int = 8) -> FFTPlan:
+    """The registry entry point: return the interned plan for this key,
+    resolving (or autotuning) it on first request.
+
+    Keys are (shape, dtype, direction, backend-after-demotion); requests
+    with an explicit ``algo`` are interned separately under (key, algo) and
+    never replace — or inherit — the auto-resolved plan.  The autotuner runs
+    at most once per cache entry; explicit-algo tuning measures only that
+    algo's radix/block_batch variants.  ``tune_batch`` sets the synthetic
+    batch the tuner measures on — pass your workload's batch, since the
+    best (algo, radix, block_batch) config is batch-dependent.
+    """
+    shape = tuple(int(d) for d in shape)
+    assert len(shape) in (1, 2), f"1-D or 2-D plans only, got {shape}"
+    # the kernels need power-of-two tile dims of at least 2 (a unit dim
+    # would underflow the tile asserts) — anything else demotes to jnp
+    kernel_ok = all(_is_pow2(d) and d >= 2 for d in shape)
+    radix = 4
+    fixed_radix = False
+
+    if len(shape) == 1:
+        resolved = resolve_algo(shape[0]) if algo == "auto" else algo
+        if resolved == "stockham2":   # radix-2 oracle: a stockham radix config
+            resolved, radix, fixed_radix = "stockham", 2, True
+        if backend == "pallas" and (resolved in ("naive", "bluestein")
+                                    or not kernel_ok):
+            backend = "jnp"           # no kernel for these paths
+        block_batch = 8
+    else:
+        if backend == "pallas" and not kernel_ok:
+            if algo == "fused":
+                algo = "auto"         # fused demotes with its backend
+            backend = "jnp"
+        if algo == "auto":
+            resolved = "fused" if backend == "pallas" else "row_col"
+        else:
+            resolved = algo
+        if backend == "jnp" and resolved == "fused":
+            raise ValueError('algo="fused" requires backend="pallas" '
+                             '(the fused kernel has no jnp equivalent)')
+        if resolved not in ("fused", "row_col"):
+            raise ValueError(f'algo={resolved!r} is not a 2-D plan algo; '
+                             'use "fused", "row_col", or "auto"')
+        # fused: one (h, w) image per VMEM tile; row_col: the 1-D kernel's
+        # row-tile default (what _fft2_direct actually executes)
+        block_batch = 1 if resolved == "fused" else 8
+
+    key = _plan_key(shape, dtype, inverse, backend)
+    cache_key = key if algo == "auto" else key + (resolved, radix)
+    cache = _PLAN_CACHE if algo == "auto" else _OVERRIDE_CACHE
+    plan = cache.get(cache_key)
+    if plan is None:
+        plan = FFTPlan(shape=shape, dtype=key[1], inverse=inverse,
+                       algo=resolved, radix=radix, backend=backend,
+                       block_batch=block_batch)
+        cache[cache_key] = plan
+    if tune and not plan.tuned:
+        plan = _autotune(cache_key, plan, batch=tune_batch,
+                         fixed_algo=algo != "auto", fixed_radix=fixed_radix)
+        cache[cache_key] = plan
+    return plan
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _OVERRIDE_CACHE.clear()
+    _AUTOTUNE_RUNS.clear()
+
+
+def plan_cache_size() -> int:
+    return len(_PLAN_CACHE)
+
+
+def autotune_count(shape, *, dtype=jnp.float32, inverse: bool = False,
+                   backend: str = "jnp") -> int:
+    """How many times the measuring autotuner ran for this key, counting
+    both the auto plan and any explicit-algo override tunes under it.
+    ``backend`` is the post-demotion backend (a pallas request that fell
+    back to jnp is counted under "jnp")."""
+    base = _plan_key(shape, dtype, inverse, backend)
+    return sum(v for k, v in _AUTOTUNE_RUNS.items() if k[:4] == base)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+def _time_candidates(plans, x: SplitComplex, *, warmup: int = 1,
+                     iters: int = 5):
+    """Best-of-iters wall time (us) per candidate, measured round-robin so
+    machine-load drift hits every candidate equally instead of whichever
+    happened to run during a busy stretch."""
+    fns = [jax.jit(lambda q, p=p: p(q)) for p in plans]
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn(x))
+    best = [float("inf")] * len(fns)
+    for _ in range(iters):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return [b * 1e6 for b in best]
+
+
+def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
+                fixed_radix: bool = False, batch: int = 8):
+    """(label, plan) candidate configs for this key — the (algo, radix,
+    block_batch) grid, kept small so measuring stays cheap.  The heuristic
+    default is always candidate 0, so tuning can never pick a config that
+    measured worse than what the registry would have used anyway.  With
+    ``fixed_algo`` (caller requested a specific algo) only that algo's
+    radix/block_batch variants are measured.  block_batch candidates are
+    clamped to ``batch`` — padding the measured batch up to a larger tile
+    would time a strictly larger workload."""
+    base = dataclasses.replace
+    out = [("default", plan)]
+    if plan.ndim == 1:
+        n = plan.n
+        if not _is_pow2(n):
+            return out                       # naive/bluestein: nothing to tune
+        if plan.backend == "pallas":
+            for bb in sorted({min(b, batch) for b in (4, 8, 16)}):
+                out.append((f"stockham/r4/bb{bb}",
+                            base(plan, algo="stockham", radix=4,
+                                 block_batch=bb)))
+            bb2 = min(8, batch)
+            out.append((f"stockham/r2/bb{bb2}",
+                        base(plan, algo="stockham", radix=2,
+                             block_batch=bb2)))
+            bb4s = min(4, batch)
+            out.append((f"four_step/bb{bb4s}",
+                        base(plan, algo="four_step", block_batch=bb4s)))
+        else:
+            out.append(("stockham/r4", base(plan, algo="stockham", radix=4)))
+            out.append(("stockham/r2", base(plan, algo="stockham", radix=2)))
+            out.append(("four_step", base(plan, algo="four_step")))
+            if n <= 2048:
+                out.append(("naive", base(plan, algo="naive")))
+    else:
+        if plan.backend == "pallas":
+            for bb in sorted({min(b, batch) for b in (1, 2)}):
+                out.append((f"fused/bb{bb}",
+                            base(plan, algo="fused", block_batch=bb)))
+            out.append(("row_col", base(plan, algo="row_col")))
+        else:
+            out.append(("row_col", base(plan, algo="row_col")))
+    if fixed_algo:
+        out = [(lbl, c) for lbl, c in out if c.algo == plan.algo]
+    if fixed_radix:                   # e.g. the "stockham2" radix-2 oracle
+        out = [(lbl, c) for lbl, c in out if c.radix == plan.radix]
+    seen, uniq = set(), []
+    for lbl, c in out:                # drop configs identical to the default
+        cfg = (c.algo, c.radix, c.block_batch)
+        if cfg not in seen:
+            seen.add(cfg)
+            uniq.append((lbl, c))
+    return uniq
+
+
+def _autotune(key, plan: FFTPlan, *, batch: int = 8,
+              fixed_algo: bool = False, fixed_radix: bool = False) -> FFTPlan:
+    """Measure every candidate config and return the winner (tuned=True)."""
+    _AUTOTUNE_RUNS[key] = _AUTOTUNE_RUNS.get(key, 0) + 1
+    rng = np.random.default_rng(0)
+    shp = (batch,) + plan.shape
+    dt = jnp.dtype(plan.dtype)
+    x = SplitComplex(jnp.asarray(rng.standard_normal(shp), dt),
+                     jnp.asarray(rng.standard_normal(shp), dt))
+    cands = _candidates(plan, fixed_algo=fixed_algo, fixed_radix=fixed_radix,
+                        batch=batch)
+    times = _time_candidates([c for _, c in cands], x)
+    report = {label: round(us, 1) for (label, _), us in zip(cands, times)}
+    best = min(range(len(cands)), key=times.__getitem__)
+    report["winner"] = cands[best][0]
+    return dataclasses.replace(cands[best][1], tuned=True, tune_report=report)
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructors
+# ---------------------------------------------------------------------------
 
 def plan_fft(n: int, **kw) -> FFTPlan:
     return FFTPlan.create(n, **kw)
@@ -60,3 +300,11 @@ def plan_fft(n: int, **kw) -> FFTPlan:
 
 def plan_ifft(n: int, **kw) -> FFTPlan:
     return FFTPlan.create(n, inverse=True, **kw)
+
+
+def plan_fft2(h: int, w: int, **kw) -> FFTPlan:
+    return get_plan((h, w), **kw)
+
+
+def plan_ifft2(h: int, w: int, **kw) -> FFTPlan:
+    return get_plan((h, w), inverse=True, **kw)

@@ -5,6 +5,11 @@ parameter-free O(S log S) token mixer (Lee-Thorp et al., FNet) built on this
 repo's FFT core.  Any transformer config can select it via
 ``token_mixing="fourier"`` (DESIGN.md §4); the ``fnet_demo`` example config
 uses it end-to-end.
+
+With ``algo="auto"`` both 1-D transforms route through the plan registry
+inside :func:`repro.core.fft1d.fft`, so the (d_model,) and (seq,) dispatch
+decisions are resolved once per shape/dtype and shared with every other
+caller — :class:`repro.serve.engine.Engine` pre-warms the (d_model,) key.
 """
 from __future__ import annotations
 

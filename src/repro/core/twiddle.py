@@ -63,6 +63,80 @@ def fourstep_twiddle(n1: int, n2: int, *, inverse: bool = False,
     return SplitComplex(jnp.asarray(c, dtype=dtype), jnp.asarray(s, dtype=dtype))
 
 
+# ---------------------------------------------------------------------------
+# Packed Stockham stage tables (mixed radix-4 / radix-2)
+# ---------------------------------------------------------------------------
+
+def stockham_radices(n: int) -> tuple:
+    """Stage plan for a mixed-radix Stockham FFT of power-of-two length n.
+
+    Radix-4 stages while 4 | n_cur, then one radix-2 tail when a factor of 2
+    remains.  Because the tail runs *last* (n_cur == 2, m == 1) its twiddle is
+    identically 1, so only the radix-4 stages need tables.
+    """
+    assert n > 0 and (n & (n - 1)) == 0, f"power-of-two n required, got {n}"
+    radices = []
+    n_cur = n
+    while n_cur >= 4:
+        radices.append(4)
+        n_cur //= 4
+    if n_cur == 2:
+        radices.append(2)
+    return tuple(radices)
+
+
+@functools.lru_cache(maxsize=64)
+def packed_radix4_twiddles_np(n: int, inverse: bool) -> tuple:
+    """(s4, 3, n//4) twiddle planes for every radix-4 Stockham stage.
+
+    Row s holds (w, w^2, w^3) for stage s with w[p] = exp(sign*2*pi*i*p/n_cur)
+    pre-broadcast over the stride axis, so within a stage each plane is read
+    as one contiguous row of length n//4 (== m * stride at every radix-4
+    stage).  The radix-2 tail needs no table (see :func:`stockham_radices`).
+    Built in float64; callers cast to the working dtype.  For n < 4 a single
+    zero row of width max(n//4, 1) is returned so kernel operands stay
+    non-empty.
+    """
+    s4 = sum(1 for r in stockham_radices(n) if r == 4)
+    width = max(n // 4, 1)
+    wr = np.zeros((max(s4, 1), 3, width), dtype=np.float64)
+    wi = np.zeros((max(s4, 1), 3, width), dtype=np.float64)
+    sign = 1.0 if inverse else -1.0
+    n_cur, stride = n, 1
+    for s in range(s4):
+        m = n_cur // 4
+        p = np.arange(m, dtype=np.float64)
+        ang = sign * 2.0 * np.pi * p / n_cur
+        w1 = np.cos(ang) + 1j * np.sin(ang)
+        for j, w in enumerate((w1, w1 * w1, w1 * w1 * w1)):
+            wr[s, j] = np.repeat(w.real, stride)
+            wi[s, j] = np.repeat(w.imag, stride)
+        n_cur, stride = m, stride * 4
+    return wr, wi
+
+
+@functools.lru_cache(maxsize=64)
+def packed_radix2_twiddles_np(n: int, inverse: bool) -> tuple:
+    """(stages, n//2) per-stage, stride-broadcast radix-2 twiddle planes.
+
+    The packed table of the original radix-2 Stockham kernel; kept as the
+    radix-2 oracle path and re-exported by :mod:`repro.kernels.fft_stockham`.
+    """
+    stages = int(n).bit_length() - 1
+    sign = 1.0 if inverse else -1.0
+    wr = np.empty((stages, n // 2), dtype=np.float64)
+    wi = np.empty((stages, n // 2), dtype=np.float64)
+    for s in range(stages):
+        n_cur = n >> s
+        stride = 1 << s
+        m = n_cur // 2
+        p = np.arange(m, dtype=np.float64)
+        ang = sign * 2.0 * np.pi * p / n_cur
+        wr[s] = np.repeat(np.cos(ang), stride)
+        wi[s] = np.repeat(np.sin(ang), stride)
+    return wr, wi
+
+
 def bit_reverse_indices(n: int) -> np.ndarray:
     """Bit-reversal permutation for power-of-two n (host-side constant)."""
     bits = int(n).bit_length() - 1

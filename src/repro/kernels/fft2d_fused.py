@@ -1,0 +1,98 @@
+"""Fused transpose-free 2-D FFT Pallas kernel.
+
+The paper's §5 2-D FFT is dominated by the global transpose between the two
+1-D passes — on the Wormhole that transpose crosses the NoC; in our
+row-column :func:`repro.core.fft2d.fft2` it round-trips through HBM twice.
+This kernel is the TPU analogue of keeping the whole problem resident in
+on-chip memory: each grid step loads a (block_batch, H, W) tile into VMEM
+and performs
+
+    row FFT -> in-VMEM tile transpose -> column FFT -> transpose back
+
+so the global transpose never touches HBM.  Per image the kernel moves
+exactly one HBM read + one HBM write (2 plane traversals); the
+transpose-based path pays 8 — rows r/w, transpose r/w, columns r/w, output
+transpose r/w (the model in
+:func:`repro.analysis.roofline.fft2d_traffic_bytes`).  Both 1-D passes are the
+mixed radix-4/radix-2 Stockham of :func:`repro.core.fft1d.stockham_stages` —
+the same arithmetic as the 1-D kernel, just run on a 3-D VMEM tile.
+
+Twiddles arrive as the packed (s4, 3, N/4) tables for W (rows) and H
+(columns); for square tiles the two tables are byte-identical but kept as
+separate operands so rectangular tiles work unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.complexmath import SplitComplex
+from repro.core import twiddle as tw
+from repro.core.fft1d import stockham_stages
+
+
+def _fft2d_kernel(wrw_ref, wiw_ref, wrh_ref, wih_ref,
+                  xre_ref, xim_ref, ore_ref, oim_ref,
+                  *, h: int, w: int, inverse: bool, radices_h, radices_w):
+    """One batch tile: both 1-D passes and the tile transpose in VMEM."""
+    re = xre_ref[...]                            # (bb, h, w)
+    im = xim_ref[...]
+    # row pass: FFT every length-w row, batched over (bb, h)
+    re, im = stockham_stages(re, im, wrw_ref[...], wiw_ref[...], w,
+                             radices_w, inverse=inverse)
+    # in-VMEM tile transpose — the HBM round-trip this kernel eliminates
+    re = jnp.swapaxes(re, -1, -2)                # (bb, w, h)
+    im = jnp.swapaxes(im, -1, -2)
+    # column pass: now contiguous length-h rows
+    re, im = stockham_stages(re, im, wrh_ref[...], wih_ref[...], h,
+                             radices_h, inverse=inverse)
+    re = jnp.swapaxes(re, -1, -2)                # back to (bb, h, w)
+    im = jnp.swapaxes(im, -1, -2)
+    if inverse:
+        scale = jnp.asarray(1.0 / (h * w), re.dtype)
+        re = re * scale
+        im = im * scale
+    ore_ref[...] = re
+    oim_ref[...] = im
+
+
+def fft2d_fused_pallas(x: SplitComplex, *, inverse: bool = False,
+                       block_batch: int = 1,
+                       interpret: bool = True) -> SplitComplex:
+    """Batched 2-D FFT over the last two axes: x.re/x.im of (batch, h, w)."""
+    batch, h, w = x.re.shape
+    for d in (h, w):
+        assert d & (d - 1) == 0 and d >= 2, \
+            f"power-of-two tile dims required, got {(h, w)}"
+    bb = min(block_batch, batch)
+    assert batch % bb == 0, (batch, bb)
+
+    wrw_np, wiw_np = tw.packed_radix4_twiddles_np(w, inverse)
+    wrh_np, wih_np = tw.packed_radix4_twiddles_np(h, inverse)
+    wrw = jnp.asarray(wrw_np, x.dtype)
+    wiw = jnp.asarray(wiw_np, x.dtype)
+    wrh = jnp.asarray(wrh_np, x.dtype)
+    wih = jnp.asarray(wih_np, x.dtype)
+
+    kernel = functools.partial(_fft2d_kernel, h=h, w=w, inverse=inverse,
+                               radices_h=tw.stockham_radices(h),
+                               radices_w=tw.stockham_radices(w))
+    grid = (batch // bb,)
+    data_spec = pl.BlockSpec((bb, h, w), lambda i: (i, 0, 0))
+    tww_spec = pl.BlockSpec(wrw.shape, lambda i: (0,) * wrw.ndim)
+    twh_spec = pl.BlockSpec(wrh.shape, lambda i: (0,) * wrh.ndim)
+
+    out_shape = [jax.ShapeDtypeStruct((batch, h, w), x.dtype)] * 2
+    ore, oim = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tww_spec, tww_spec, twh_spec, twh_spec,
+                  data_spec, data_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wrw, wiw, wrh, wih, x.re, x.im)
+    return SplitComplex(ore, oim)

@@ -1,21 +1,26 @@
-"""VMEM-resident Stockham FFT Pallas kernel.
+"""VMEM-resident Stockham FFT Pallas kernel (mixed radix-4 / radix-2).
 
 The TPU analogue of the paper's SRAM-resident single-core FFT (Section 4),
 with the full reorder-elimination ladder applied:
 
-- The whole (batch-tile x N) problem lives in VMEM for all log2(N) stages —
-  zero HBM round-trips between stages (the paper pays an SRAM round-trip per
-  stage through its circular buffers).
+- The whole (batch-tile x N) problem lives in VMEM for all stages — zero HBM
+  round-trips between stages (the paper pays an SRAM round-trip per stage
+  through its circular buffers).
 - The Pallas grid pipelines HBM->VMEM tile loads against compute — the
   paper's *chunked* optimisation, done by the Mosaic pipeline emitter.
 - Stockham's autosort write pattern removes the explicit reorders entirely;
   every slice below is a contiguous block, so Mosaic emits full-width vector
   ld/st (the paper's *128-bit copies*, without the fused-reorder contiguity
   regression it reports for *Single data copy*).
+- Radix-4 stages (radix-2 tail for odd log2 N) halve the stage count — and
+  with it the inter-stage VMEM traffic — versus the radix-2 kernel, which is
+  kept as ``radix=2`` (the autotune candidate and numerical oracle).
 
-Twiddles arrive as one packed (stages, N/2) table: row s holds the
-per-butterfly factors for stage s, pre-broadcast over the stride axis, so the
-kernel's twiddle access is also a contiguous row.
+Twiddles arrive packed: radix-4 stages read a (s4, 3, N/4) table (row s =
+stage s's (w, w^2, w^3), pre-broadcast over the stride axis), radix-2 reads
+the (stages, N/2) table — either way every access is a contiguous row.  The
+stage arithmetic itself is :func:`repro.core.fft1d.stockham_stages`, shared
+with the jnp path and the fused 2-D kernel.
 """
 from __future__ import annotations
 
@@ -23,58 +28,39 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.complexmath import SplitComplex
+from repro.core import twiddle as tw
+from repro.core.fft1d import stockham_stages, stockham_radix2_stages
+
+# Back-compat export: the packed radix-2 table historically lived here.
+packed_twiddles_np = tw.packed_radix2_twiddles_np
 
 
 def _log2(n: int) -> int:
     return int(n).bit_length() - 1
 
 
-@functools.lru_cache(maxsize=64)
-def packed_twiddles_np(n: int, inverse: bool) -> tuple:
-    """(stages, n//2) per-stage, stride-broadcast twiddle planes (float64)."""
-    stages = _log2(n)
-    sign = 1.0 if inverse else -1.0
-    wr = np.empty((stages, n // 2), dtype=np.float64)
-    wi = np.empty((stages, n // 2), dtype=np.float64)
-    for s in range(stages):
-        n_cur = n >> s
-        stride = 1 << s
-        m = n_cur // 2
-        p = np.arange(m, dtype=np.float64)
-        ang = sign * 2.0 * np.pi * p / n_cur
-        wr[s] = np.repeat(np.cos(ang), stride)
-        wi[s] = np.repeat(np.sin(ang), stride)
-    return wr, wi
-
-
 def _stockham_kernel(wre_ref, wim_ref, xre_ref, xim_ref, ore_ref, oim_ref,
-                     *, n: int, inverse: bool):
-    """One batch tile, all stages in VMEM."""
-    stages = _log2(n)
-    h = n // 2
-    re = xre_ref[...]
-    im = xim_ref[...]
-    b = re.shape[0]
-    for s in range(stages):                      # static unroll: log2(N) steps
-        stride = 1 << s
-        m = n >> (s + 1)
-        ar, ai = re[:, :h], im[:, :h]            # contiguous halves
-        br, bi = re[:, h:], im[:, h:]
-        wr = wre_ref[s, :]
-        wi = wim_ref[s, :]
-        ur, ui = ar + br, ai + bi                # a + b
-        sr, si = ar - br, ai - bi                # a - b
-        vr = sr * wr - si * wi                   # (a - b) * w
-        vi = sr * wi + si * wr
-        # autosort interleave: (b, m, stride) pairs -> (b, n)
-        re = jnp.stack([ur.reshape(b, m, stride),
-                        vr.reshape(b, m, stride)], axis=2).reshape(b, n)
-        im = jnp.stack([ui.reshape(b, m, stride),
-                        vi.reshape(b, m, stride)], axis=2).reshape(b, n)
+                     *, n: int, inverse: bool, radices):
+    """One batch tile, all mixed-radix stages in VMEM."""
+    re, im = stockham_stages(xre_ref[...], xim_ref[...],
+                             wre_ref[...], wim_ref[...], n, radices,
+                             inverse=inverse)
+    if inverse:
+        scale = jnp.asarray(1.0 / n, re.dtype)
+        re = re * scale
+        im = im * scale
+    ore_ref[...] = re
+    oim_ref[...] = im
+
+
+def _stockham_kernel_r2(wre_ref, wim_ref, xre_ref, xim_ref, ore_ref, oim_ref,
+                        *, n: int, inverse: bool):
+    """Radix-2 variant: one butterfly per stage, log2(N) stages."""
+    re, im = stockham_radix2_stages(xre_ref[...], xim_ref[...],
+                                    wre_ref[...], wim_ref[...], n)
     if inverse:
         scale = jnp.asarray(1.0 / n, re.dtype)
         re = re * scale
@@ -84,23 +70,29 @@ def _stockham_kernel(wre_ref, wim_ref, xre_ref, xim_ref, ore_ref, oim_ref,
 
 
 def fft_stockham_pallas(x: SplitComplex, *, inverse: bool = False,
-                        block_batch: int = 8,
+                        radix: int = 4, block_batch: int = 8,
                         interpret: bool = True) -> SplitComplex:
     """Batched FFT along the last axis: x.re/x.im of shape (batch, n)."""
     batch, n = x.re.shape
     assert n & (n - 1) == 0 and n >= 2, f"power-of-two n required, got {n}"
-    stages = _log2(n)
+    assert radix in (2, 4), radix
     bb = min(block_batch, batch)
     assert batch % bb == 0, (batch, bb)
-    wr_np, wi_np = packed_twiddles_np(n, inverse)
+
+    if radix == 4:
+        wr_np, wi_np = tw.packed_radix4_twiddles_np(n, inverse)
+        kernel = functools.partial(_stockham_kernel, n=n, inverse=inverse,
+                                   radices=tw.stockham_radices(n))
+    else:
+        wr_np, wi_np = tw.packed_radix2_twiddles_np(n, inverse)
+        kernel = functools.partial(_stockham_kernel_r2, n=n, inverse=inverse)
     wr = jnp.asarray(wr_np, x.dtype)
     wi = jnp.asarray(wi_np, x.dtype)
 
     grid = (batch // bb,)
     data_spec = pl.BlockSpec((bb, n), lambda i: (i, 0))
-    tw_spec = pl.BlockSpec((stages, n // 2), lambda i: (0, 0))
+    tw_spec = pl.BlockSpec(wr.shape, lambda i: (0,) * wr.ndim)
 
-    kernel = functools.partial(_stockham_kernel, n=n, inverse=inverse)
     out_shape = [jax.ShapeDtypeStruct((batch, n), x.dtype)] * 2
     ore, oim = pl.pallas_call(
         kernel,

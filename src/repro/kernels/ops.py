@@ -16,6 +16,7 @@ from repro.core.complexmath import SplitComplex
 from . import fft_stockham as _stockham
 from . import fft_fourstep as _fourstep
 from . import fft_stage as _stage
+from . import fft2d_fused as _fused2d
 
 
 def _on_tpu() -> bool:
@@ -45,19 +46,52 @@ def _pad_batch(x: SplitComplex, bb: int):
     return x, batch
 
 
-@functools.partial(jax.jit, static_argnames=("inverse", "block_batch",
-                                             "interpret"))
-def fft_stockham(x: SplitComplex, *, inverse: bool = False,
+@functools.partial(jax.jit, static_argnames=("inverse", "radix",
+                                             "block_batch", "interpret"))
+def fft_stockham(x: SplitComplex, *, inverse: bool = False, radix: int = 4,
                  block_batch: int = 8, interpret: bool = None) -> SplitComplex:
     if interpret is None:
         interpret = not _on_tpu()
     flat, lead = _flatten(x)
     padded, batch = _pad_batch(flat, block_batch)
-    out = _stockham.fft_stockham_pallas(padded, inverse=inverse,
+    out = _stockham.fft_stockham_pallas(padded, inverse=inverse, radix=radix,
                                         block_batch=block_batch,
                                         interpret=interpret)
     out = SplitComplex(out.re[:batch], out.im[:batch])
     return _unflatten(out, lead)
+
+
+def _flatten2d(x: SplitComplex):
+    h, w = x.shape[-2:]
+    lead = x.shape[:-2]
+    batch = 1
+    for d in lead:
+        batch *= d
+    return SplitComplex(x.re.reshape(batch, h, w),
+                        x.im.reshape(batch, h, w)), lead
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_batch",
+                                             "interpret"))
+def fft2d_fused(x: SplitComplex, *, inverse: bool = False,
+                block_batch: int = 1, interpret: bool = None) -> SplitComplex:
+    """Fused transpose-free 2-D FFT over the last two axes (any leading
+    batch dims); see :mod:`repro.kernels.fft2d_fused`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat, lead = _flatten2d(x)
+    h, w = flat.shape[-2:]
+    batch = flat.shape[0]
+    bb = min(block_batch, batch)
+    pad = (-batch) % bb
+    if pad:
+        flat = SplitComplex(jnp.pad(flat.re, ((0, pad), (0, 0), (0, 0))),
+                            jnp.pad(flat.im, ((0, pad), (0, 0), (0, 0))))
+    out = _fused2d.fft2d_fused_pallas(flat, inverse=inverse,
+                                      block_batch=bb, interpret=interpret)
+    out = SplitComplex(out.re[:batch], out.im[:batch])
+    return SplitComplex(out.re.reshape(*lead, h, w),
+                        out.im.reshape(*lead, h, w))
 
 
 @functools.partial(jax.jit, static_argnames=("inverse", "block_batch", "n1",

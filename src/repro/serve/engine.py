@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as fftplan
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -51,6 +52,19 @@ class Engine:
             lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
         self._key = jax.random.PRNGKey(scfg.seed)
         self.finished: dict = {}
+        self._warm_fft_plans()
+
+    def _warm_fft_plans(self) -> None:
+        """Resolve the (d_model,) FFT plan fourier mixers request on every
+        call, once at engine construction (FFTW plan-then-execute) — the
+        plan lives in the process-wide registry, not on the engine.  The
+        seq-axis key depends on the runtime sequence length (1 per decode
+        step, prompt length at prefill), so it resolves lazily on first use."""
+        cfg = self.cfg
+        uses_fourier = (cfg.token_mixing == "fourier"
+                        or any("fourier" in b for b in cfg.block_pattern))
+        if uses_fourier:
+            fftplan.get_plan((cfg.d_model,), dtype=jnp.dtype(cfg.dtype))
 
     # -- request lifecycle ---------------------------------------------------
 

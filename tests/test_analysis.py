@@ -64,9 +64,9 @@ def test_roofline_terms_math():
 
 
 def test_sharding_fit_degrades():
+    from repro.launch.mesh import make_mesh
     from repro.launch.sharding import _fit
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
 
     class FakeMesh:
         axis_names = ("data", "model")

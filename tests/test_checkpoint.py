@@ -63,12 +63,13 @@ d = sys.argv[1] if len(sys.argv) > 1 else None
 import os
 tmp = os.environ["CKPT_DIR"]
 mgr = CheckpointManager(tmp, keep=2)
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("data",))
 sh = NamedSharding(mesh, P("data", None))
 w = jax.device_put(jnp.arange(32.0).reshape(8, 4), sh)
 mgr.save(1, {"w": w})
 # elastic restore onto a DIFFERENT layout (2-way on the other dim)
-mesh2 = jax.make_mesh((2, 2), ("a", "b"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh2 = make_mesh((2, 2), ("a", "b"))
 sh2 = NamedSharding(mesh2, P(None, "a"))
 got, _ = mgr.restore(1, {"w": jnp.zeros((8, 4))}, shardings={"w": sh2})
 np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(32.0).reshape(8, 4))

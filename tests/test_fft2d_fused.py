@@ -1,0 +1,117 @@
+"""Fused transpose-free 2-D FFT kernel, radix-4 Stockham, and rfft2 edges."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (fft2, rfft2, irfft2, from_complex, to_complex,
+                        fft_stockham, fft_stockham_radix2)
+from repro.core.complexmath import SplitComplex
+from repro.kernels import ops
+
+
+def _rand2d(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape)
+            + 1j * rng.standard_normal(shape)).astype(np.complex64)
+
+
+@pytest.mark.parametrize("hw", [(8, 8), (32, 8), (8, 32), (64, 64),
+                                (128, 64), (256, 256)])
+def test_fused_kernel_matches_numpy(hw):
+    z = _rand2d(hw, seed=sum(hw))
+    got = np.asarray(to_complex(ops.fft2d_fused(from_complex(jnp.asarray(z)))))
+    ref = np.fft.fft2(z)
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+
+
+def test_fused_kernel_leading_batch_dims():
+    z = _rand2d((2, 3, 16, 32), seed=7)
+    got = np.asarray(to_complex(ops.fft2d_fused(from_complex(jnp.asarray(z)))))
+    ref = np.fft.fft2(z)
+    assert got.shape == ref.shape
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+
+
+def test_fused_kernel_batch_padding():
+    """batch=3 with block_batch=2 exercises the pad/unpad path."""
+    z = _rand2d((3, 32, 32), seed=9)
+    got = np.asarray(to_complex(
+        ops.fft2d_fused(from_complex(jnp.asarray(z)), block_batch=2)))
+    ref = np.fft.fft2(z)
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+
+
+def test_fused_inverse_roundtrip():
+    z = _rand2d((2, 64, 64), seed=3)
+    x = from_complex(jnp.asarray(z))
+    back = ops.fft2d_fused(ops.fft2d_fused(x), inverse=True)
+    assert np.abs(np.asarray(to_complex(back)) - z).max() < 1e-3
+
+
+def test_fft2_pallas_backend_routes_to_fused():
+    z = _rand2d((64, 64), seed=4)
+    x = from_complex(jnp.asarray(z))
+    got = np.asarray(to_complex(fft2(x, backend="pallas")))
+    ref = np.fft.fft2(z)
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+
+
+def test_fft2_pallas_transpose_baseline_agrees():
+    z = _rand2d((64, 64), seed=5)
+    x = from_complex(jnp.asarray(z))
+    fused = np.asarray(to_complex(fft2(x, backend="pallas", algo="fused")))
+    rowcol = np.asarray(to_complex(fft2(x, backend="pallas",
+                                        algo="row_col")))
+    assert np.abs(fused - rowcol).max() / np.abs(rowcol).max() < 1e-4
+
+
+def test_fft2_rejects_1d_input():
+    x = from_complex(jnp.asarray(np.arange(8.0) + 0j, jnp.complex64))
+    with pytest.raises(ValueError, match="at least 2 axes"):
+        fft2(x)
+
+
+# -- radix-4 Stockham vs the radix-2 oracle ---------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8, 64, 128, 1024, 2048])
+def test_radix4_matches_radix2_oracle(n):
+    """Same shape bit-for-bit, values within 1e-4 of the radix-2 path."""
+    z = _rand2d((3, n), seed=n)
+    x = from_complex(jnp.asarray(z))
+    r4 = to_complex(fft_stockham(x))
+    r2 = to_complex(fft_stockham_radix2(x))
+    assert r4.shape == r2.shape and r4.dtype == r2.dtype
+    scale = np.abs(np.asarray(r2)).max()
+    assert np.abs(np.asarray(r4) - np.asarray(r2)).max() / scale < 1e-4
+    ref = np.fft.fft(z)
+    assert np.abs(np.asarray(r4) - ref).max() / np.abs(ref).max() < 1e-4
+
+
+@pytest.mark.parametrize("radix", [2, 4])
+def test_kernel_radix_variants(radix):
+    z = _rand2d((4, 512), seed=radix)
+    x = from_complex(jnp.asarray(z))
+    got = np.asarray(to_complex(ops.fft_stockham(x, radix=radix)))
+    ref = np.fft.fft(z)
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+
+
+# -- rfft2 / irfft2 round-trips ---------------------------------------------
+
+@pytest.mark.parametrize("hw", [(16, 16), (32, 64), (64, 32)])
+def test_rfft2_matches_numpy(hw):
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal(hw).astype(np.float32)
+    got = np.asarray(to_complex(rfft2(jnp.asarray(x))))
+    ref = np.fft.rfft2(x)
+    assert got.shape == ref.shape
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+
+
+@pytest.mark.parametrize("hw", [(16, 16), (32, 64)])
+def test_irfft2_roundtrip(hw):
+    rng = np.random.default_rng(12)
+    x = rng.standard_normal((2,) + hw).astype(np.float32)
+    back = np.asarray(irfft2(rfft2(jnp.asarray(x))))
+    assert back.shape == x.shape
+    assert np.abs(back - x).max() < 1e-4

@@ -1,4 +1,8 @@
 """Property-based tests (hypothesis) for the FFT core's invariants."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency (requirements-dev)")
+
 import hypothesis
 import hypothesis.strategies as st
 import jax.numpy as jnp

@@ -83,6 +83,23 @@ def test_batch_padding_path():
                                atol=3e-4 * max(np.abs(r).max(), 1.0))
 
 
+@pytest.mark.parametrize("batch,bb", [
+    (1, 8),    # batch < block_batch: tile shrinks to the batch
+    (5, 8),    # batch < block_batch, not a divisor of it
+    (10, 4),   # batch > block_batch but not a multiple: pad 10 -> 12
+    (9, 8),    # one full tile plus a ragged remainder
+])
+def test_batch_padding_edges(batch, bb):
+    """Pad/unpad against the jnp reference for every ragged-batch shape."""
+    x = _rand(batch, 64, jnp.float32, seed=batch * 31 + bb)
+    r = np.asarray(to_complex(ref.fft_ref(x)))
+    tol = 3e-4 * max(np.abs(r).max(), 1.0)
+    for fn in (ops.fft_stockham, ops.fft_fourstep):
+        got = np.asarray(to_complex(fn(x, block_batch=bb)))
+        assert got.shape == r.shape
+        np.testing.assert_allclose(got, r, atol=tol)
+
+
 def test_leading_dims_flatten():
     rng = np.random.default_rng(0)
     z = (rng.standard_normal((2, 3, 64)) + 1j * rng.standard_normal((2, 3, 64))

@@ -1,9 +1,12 @@
-"""FFTPlan dispatch: algorithm auto-selection and the Pallas backend."""
+"""FFTPlan dispatch: algo auto-selection, the registry cache, the autotuner,
+and the Pallas backend."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FFTPlan, from_complex, plan_fft, plan_ifft, to_complex
+from repro.core import (FFTPlan, autotune_count, clear_plan_cache, fft,
+                        from_complex, get_plan, plan_fft, plan_fft2,
+                        plan_ifft, resolve_algo, to_complex)
 
 
 def test_auto_algo_selection():
@@ -38,3 +41,76 @@ def test_inverse_plan_roundtrip():
 def test_pallas_backend_falls_back_for_nonpow2():
     plan = FFTPlan.create(1000, backend="pallas")
     assert plan.backend == "jnp"            # bluestein has no kernel path
+
+
+def test_resolve_algo_shared_table():
+    """plan and fft1d dispatch through the one size table (no drift)."""
+    for n in (100, 128, 1000, 4096, 1 << 21):
+        assert plan_fft(n).algo == resolve_algo(n)
+
+
+def test_plan_cache_returns_same_object():
+    """Identical (shape, dtype, direction, backend) -> the same plan object."""
+    assert plan_fft(2048) is plan_fft(2048)
+    assert plan_fft(2048) is get_plan((2048,))
+    assert plan_fft2(64, 64) is plan_fft2(64, 64)
+    # any key component changing gives a distinct plan
+    assert plan_fft(2048) is not plan_fft(2048, inverse=True)
+    assert plan_fft(2048) is not plan_fft(2048, backend="pallas")
+    assert plan_fft(2048) is not plan_fft(2048, dtype=jnp.bfloat16)
+
+
+def test_explicit_algo_does_not_pollute_auto_cache():
+    """An algo override must never become the cached plan for the auto key."""
+    clear_plan_cache()
+    forced = plan_fft(4096, algo="naive")       # cold key, explicit algo
+    assert forced.algo == "naive"
+    auto = plan_fft(4096)
+    assert auto.algo == resolve_algo(4096) == "four_step"
+    assert plan_fft(4096) is auto
+
+
+def test_fused_algo_demotes_with_backend():
+    # non-pow2 kills the pallas backend; algo="fused" must demote with it
+    plan = plan_fft2(12, 20, backend="pallas", algo="fused")
+    assert plan.backend == "jnp" and plan.algo == "row_col"
+    # and on the jnp backend outright, fused is an error at the direct path
+    from repro.core.fft2d import _fft2_direct
+    from repro.core.complexmath import SplitComplex
+    z = SplitComplex(jnp.zeros((4, 4)), jnp.zeros((4, 4)))
+    with pytest.raises(ValueError, match="fused"):
+        _fft2_direct(z, algo="fused", backend="jnp")
+
+
+def test_fft_auto_routes_through_registry():
+    rng = np.random.default_rng(3)
+    x = (rng.standard_normal((2, 512)) + 1j * rng.standard_normal((2, 512))) \
+        .astype(np.complex64)
+    z = from_complex(jnp.asarray(x))
+    before = plan_fft(512)
+    got = np.asarray(to_complex(fft(z)))
+    np.testing.assert_allclose(got, np.fft.fft(x),
+                               atol=5e-4 * np.abs(np.fft.fft(x)).max())
+    assert plan_fft(512) is before          # fft() reused the cached plan
+
+
+def test_autotune_runs_at_most_once_per_key():
+    p1 = plan_fft(256, tune=True)
+    assert p1.tuned and p1.tune_report and "winner" in p1.tune_report
+    p2 = plan_fft(256, tune=True)
+    assert p1 is p2
+    assert autotune_count((256,)) == 1
+    # un-tuned request for the same key also reuses the tuned plan
+    assert plan_fft(256) is p1
+
+
+def test_tuned_2d_plan_executes():
+    plan = plan_fft2(32, 32, backend="pallas", tune=True)
+    assert plan.tuned
+    rng = np.random.default_rng(4)
+    z = (rng.standard_normal((32, 32)) + 1j * rng.standard_normal((32, 32))) \
+        .astype(np.complex64)
+    got = np.asarray(to_complex(plan(from_complex(jnp.asarray(z)))))
+    ref = np.fft.fft2(z)
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+    assert autotune_count((32, 32), backend="pallas") == 1

@@ -1,4 +1,9 @@
 """Straggler mitigation logic: deterministic rebalancing + ejection."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency (requirements-dev)")
+pytest.importorskip("repro.dist", reason="repro.dist not built yet (ROADMAP)")
+
 import numpy as np
 from hypothesis import given, settings
 import hypothesis.strategies as st
