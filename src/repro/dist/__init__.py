@@ -1,0 +1,14 @@
+"""Multi-device layer: pencil FFTs, compressed collectives, straggler
+mitigation, pipeline parallelism.
+
+Everything here speaks shard_map + named mesh axes and imports jax through
+:mod:`repro.dist._compat`, so one jax-version quirk never takes the whole
+distributed layer down (the failure mode that kept four test modules
+skipped before this package existed).
+"""
+from . import compression, pencil, pipeline, straggler  # noqa: F401
+from ._compat import all_to_all, make_mesh, shard_map  # noqa: F401
+from .compression import psum_compressed, wire_bytes  # noqa: F401
+from .pencil import pfft1d, pfft2, pfft2_hierarchical, pfft3  # noqa: F401
+from .pipeline import pipelined_apply  # noqa: F401
+from .straggler import rebalance, should_eject  # noqa: F401

@@ -1,0 +1,72 @@
+"""Compressed gradient collectives.
+
+Data-parallel training is all-reduce bound at scale; these helpers trade
+collective bytes for quantisation error (which the train step recovers via
+error feedback, see :mod:`repro.train.train_step`).  ``psum_compressed``
+simulates the wire format faithfully — values really pass through the
+compressed representation before the reduction — so the numerics match what
+a bandwidth-optimised implementation would produce, while
+:func:`wire_bytes` reports the bytes such an implementation would move.
+
+Methods:
+
+- ``"none"``  plain f32 psum (4 B/elem on the wire).
+- ``"bf16"``  cast to bfloat16 before the reduce (2 B/elem): ~3 decimal
+  digits of mantissa, same range as f32.
+- ``"int8"``  per-shard symmetric linear quantisation (1 B/elem + one scale
+  per leaf per shard): q = round(x / s), s = max|x| / 127.  The scale is
+  computed on the *local* shard so no extra collective is needed to agree
+  on it; the reduce sums dequantised shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+METHODS = ("none", "bf16", "int8")
+
+
+def _psum_one(x, axis_name: str, method: str):
+    if method == "none":
+        return jax.lax.psum(x, axis_name)
+    if method == "bf16":
+        wire = x.astype(jnp.bfloat16)
+        return jax.lax.psum(wire.astype(x.dtype), axis_name)
+    if method == "int8":
+        scale = jnp.max(jnp.abs(x)) / 127.0
+        scale = jnp.maximum(scale, jnp.finfo(x.dtype).tiny)
+        q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+        deq = q.astype(x.dtype) * scale
+        return jax.lax.psum(deq, axis_name)
+    raise ValueError(f"unknown compression method {method!r}; "
+                     f"expected one of {METHODS}")
+
+
+def psum_compressed(tree, axis_name: str, method: str = "none"):
+    """psum every leaf of ``tree`` over ``axis_name`` through the ``method``
+    wire format.  Call inside shard_map; accepts a single array or a pytree.
+    """
+    return jax.tree.map(lambda x: _psum_one(x, axis_name, method), tree)
+
+
+def wire_bytes(tree, method: str = "none") -> int:
+    """Bytes per device moved over the wire by one all-reduce of ``tree``.
+
+    ``"bf16"`` never *inflates* a leaf (a leaf already narrower than 16 bits
+    stays at its own width); ``"int8"`` is 1 B/elem for every leaf (per-leaf
+    scales are O(leaves), not counted).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown compression method {method!r}; "
+                         f"expected one of {METHODS}")
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(np.prod(np.shape(leaf)))
+        itemsize = jnp.dtype(leaf.dtype).itemsize
+        if method == "bf16":
+            itemsize = min(itemsize, 2)
+        elif method == "int8":
+            itemsize = 1
+        total += n * itemsize
+    return total

@@ -1,0 +1,300 @@
+"""Distributed pencil FFTs: the paper's Section 5 schedule at multi-device
+scale.
+
+The single-chip 2-D FFT in the paper is *local row FFTs -> global transpose
+-> local column FFTs*; scaled across devices that global transpose becomes
+an ``all_to_all`` over pencils (the slab/pencil decomposition every
+distributed FFT library is built on).  Four transforms live here:
+
+- :func:`pfft2`               2-D FFT, rows sharded over one mesh axis.  One
+                              all_to_all replaces the HBM transpose; the
+                              optional ``chunks=`` schedule splits the row
+                              pass so each chunk's all_to_all can overlap the
+                              next chunk's compute (the paper's
+                              communication-hiding ambition, expressed as a
+                              static interleaving XLA is free to pipeline).
+- :func:`pfft2_hierarchical`  Two-hop transpose for a (pod, data) mesh: one
+                              intra-pod all_to_all then one inter-pod
+                              all_to_all, so the scarce pod-to-pod bandwidth
+                              only ever carries already-pencilised tiles.
+- :func:`pfft3`               3-D FFT over a 2-D process grid (pencil
+                              decomposition proper; the paper's future-work
+                              case): Z local, then two axis exchanges.
+- :func:`pfft1d`              Distributed Bailey four-step for one giant 1-D
+                              FFT: column FFTs, twiddle correction, row FFTs
+                              with the two inter-step transposes as
+                              all_to_alls.  Output stays in the four-step
+                              (h, w) layout (flattened, row-sharded); the
+                              matching ``inverse=True`` consumes exactly that
+                              layout, so roundtrips are exact.
+
+All local 1-D passes route through the plan registry
+(:mod:`repro.core.plan`) via ``algo="auto"``, so the fused/Stockham kernels
+and any autotune decisions from the single-chip path are reused per local
+shape; ``backend="pallas"`` switches the local passes onto the Pallas
+kernels.  Everything operates on :class:`~repro.core.complexmath.SplitComplex`
+(separate re/im planes — no complex dtype anywhere, mirroring the Tensix
+constraint).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.complexmath import SplitComplex
+from repro.core import plan as plan_lib
+
+from ._compat import all_to_all, shard_map_unchecked
+
+
+# ---------------------------------------------------------------------------
+# Local helpers (run inside shard_map on per-device blocks)
+# ---------------------------------------------------------------------------
+
+def _fft_last(x: SplitComplex, *, inverse: bool, backend: str) -> SplitComplex:
+    """1-D FFT of the last axis through the plan registry (algo="auto")."""
+    pl = plan_lib.get_plan((x.shape[-1],), dtype=x.dtype, inverse=inverse,
+                           backend=backend)
+    return pl(x)
+
+
+def _fft_axis(x: SplitComplex, axis: int, *, inverse: bool,
+              backend: str) -> SplitComplex:
+    re = jnp.moveaxis(x.re, axis, -1)
+    im = jnp.moveaxis(x.im, axis, -1)
+    y = _fft_last(SplitComplex(re, im), inverse=inverse, backend=backend)
+    return SplitComplex(jnp.moveaxis(y.re, -1, axis),
+                        jnp.moveaxis(y.im, -1, axis))
+
+
+def _a2a(x: SplitComplex, axis_name: str, split_axis: int,
+         concat_axis: int) -> SplitComplex:
+    return SplitComplex(all_to_all(x.re, axis_name, split_axis, concat_axis),
+                        all_to_all(x.im, axis_name, split_axis, concat_axis))
+
+
+def _swap_last2(x: SplitComplex) -> SplitComplex:
+    return SplitComplex(jnp.swapaxes(x.re, -1, -2),
+                        jnp.swapaxes(x.im, -1, -2))
+
+
+# ---------------------------------------------------------------------------
+# 2-D pencil FFT over one mesh axis
+# ---------------------------------------------------------------------------
+
+def pfft2(x: SplitComplex, mesh, axis: str = "data", *, chunks: int = 1,
+          transposed_output: bool = True, inverse: bool = False,
+          backend: str = "jnp") -> SplitComplex:
+    """2-D FFT of a (H, W) array whose rows are sharded over ``axis``.
+
+    Schedule per device (p = mesh size along ``axis``):
+
+    1. local row FFTs on the (H/p, W) slab — in ``chunks`` slices, each
+       immediately followed by its all_to_all so communication of chunk c
+       can overlap compute of chunk c+1;
+    2. all_to_all pencil transpose (H/p, W) -> (H, W/p);
+    3. local column FFTs on the now-resident columns.
+
+    With ``transposed_output=True`` (default) the result is returned as the
+    (W, H) transpose — column-major frequencies — sharded over ``axis``;
+    this needs *no second all_to_all* (only a local transpose), exactly like
+    the paper's fused kernel leaves the transpose implicit.  With
+    ``transposed_output=False`` a second all_to_all restores natural (H, W)
+    row-sharded order, so ``pfft2(pfft2(x), inverse=True)`` roundtrips.
+    """
+    h, w = x.shape[-2], x.shape[-1]
+    p = mesh.shape[axis]
+    assert h % p == 0 and w % p == 0, (x.shape, p)
+    assert (h // p) % chunks == 0, (h, p, chunks)
+
+    def body(re, im):
+        rows = re.shape[0]                       # H/p local rows
+        rc = rows // chunks
+        pieces = []
+        for c in range(chunks):
+            sl = slice(c * rc, (c + 1) * rc)
+            y = _fft_last(SplitComplex(re[sl], im[sl]),
+                          inverse=inverse, backend=backend)
+            pieces.append(_a2a(y, axis, 1, 0))   # (p*rc, W/p), peer-major
+        if chunks == 1:
+            z = pieces[0]
+        else:
+            # chunk-major (chunks, p, rc, W/p) -> row-natural (p, chunks, ..)
+            sr = jnp.stack([q.re for q in pieces]).reshape(chunks, p, rc, -1)
+            si = jnp.stack([q.im for q in pieces]).reshape(chunks, p, rc, -1)
+            z = SplitComplex(sr.transpose(1, 0, 2, 3).reshape(h, -1),
+                             si.transpose(1, 0, 2, 3).reshape(h, -1))
+        z = _fft_axis(z, 0, inverse=inverse, backend=backend)  # (H, W/p)
+        if transposed_output:
+            return _swap_last2(z)                # (W/p, H): local only
+        return _a2a(z, axis, 0, 1)               # (H/p, W): natural order
+
+    out_spec = P(axis, None)
+    fn = shard_map_unchecked(body, mesh=mesh,
+                   in_specs=(P(axis, None), P(axis, None)),
+                   out_specs=SplitComplex(out_spec, out_spec))
+    return fn(x.re, x.im)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-hop transpose (multi-pod)
+# ---------------------------------------------------------------------------
+
+def pfft2_hierarchical(x: SplitComplex, mesh, pod_axis: str = "pod",
+                       data_axis: str = "data", *, inverse: bool = False,
+                       backend: str = "jnp") -> SplitComplex:
+    """2-D pencil FFT on a (pod, data) mesh with a two-hop transpose.
+
+    Rows are sharded over *both* axes (``P((pod, data), None)``).  Instead of
+    one flat all_to_all over all pod*data devices, the pencil exchange runs
+    as (1) an intra-pod all_to_all over ``data_axis`` — the cheap hop, full
+    row blocks — then (2) an inter-pod all_to_all over ``pod_axis`` that
+    only moves already-narrowed (W/data) pencils.  Output is the (W, H)
+    transpose sharded ``P((data, pod), None)`` — the data-major tiling is
+    what makes the two-hop chunk order line up with the natural column
+    order, so no cross-device reshuffle is ever needed.
+    """
+    h, w = x.shape[-2], x.shape[-1]
+    np_, nd = mesh.shape[pod_axis], mesh.shape[data_axis]
+    ndev = np_ * nd
+    assert h % ndev == 0 and w % ndev == 0, (x.shape, np_, nd)
+
+    def body(re, im):
+        y = _fft_last(SplitComplex(re, im), inverse=inverse, backend=backend)
+        # hop 1 (intra-pod): (H/(np*nd), W) -> (H/np, W/nd); rows stay
+        # natural because each pod's devices hold contiguous row blocks
+        y = _a2a(y, data_axis, 1, 0)
+        # hop 2 (inter-pod): (H/np, W/nd) -> (H, W/(nd*np)); peer-major
+        # concat over pods is again the natural row order
+        y = _a2a(y, pod_axis, 1, 0)
+        y = _fft_axis(y, 0, inverse=inverse, backend=backend)
+        return _swap_last2(y)                    # (W/(nd*np), H)
+
+    out_spec = P((data_axis, pod_axis), None)
+    fn = shard_map_unchecked(body, mesh=mesh,
+                   in_specs=(P((pod_axis, data_axis), None),) * 2,
+                   out_specs=SplitComplex(out_spec, out_spec))
+    return fn(x.re, x.im)
+
+
+# ---------------------------------------------------------------------------
+# 3-D pencil FFT over a 2-D process grid
+# ---------------------------------------------------------------------------
+
+def pfft3(x: SplitComplex, mesh, axes=("data", "model"), *,
+          inverse: bool = False, backend: str = "jnp") -> SplitComplex:
+    """3-D FFT of an (X, Y, Z) array on a 2-D process grid — the pencil
+    decomposition proper (the paper's future-work case).
+
+    Input is sharded ``P(axes[0], axes[1], None)``: every device owns a
+    Z-pencil.  Three local FFT passes separated by two single-axis
+    all_to_alls (never a global one):
+
+    1. FFT along Z (local);
+    2. all_to_all over ``axes[1]``: trade Z for Y -> Y-pencils; FFT along Y;
+    3. all_to_all over ``axes[0]``: trade Y for X -> X-pencils; FFT along X.
+
+    Output is returned transposed to (Z, Y, X) — a local transpose of the
+    final X-pencils — sharded ``P(axes[1], axes[0], None)``.
+    """
+    a, b = axes
+    na, nb = mesh.shape[a], mesh.shape[b]
+    gx, gy, gz = x.shape[-3], x.shape[-2], x.shape[-1]
+    assert gx % na == 0 and gy % (na * nb) == 0 and gz % nb == 0, \
+        (x.shape, na, nb)
+
+    def body(re, im):
+        z = _fft_last(SplitComplex(re, im), inverse=inverse, backend=backend)
+        z = _a2a(z, b, 2, 1)                     # (X/na, Y, Z/nb)
+        z = _fft_axis(z, 1, inverse=inverse, backend=backend)
+        z = _a2a(z, a, 1, 0)                     # (X, Y/na, Z/nb)
+        z = _fft_axis(z, 0, inverse=inverse, backend=backend)
+        t = lambda q: jnp.transpose(q, (2, 1, 0))
+        return SplitComplex(t(z.re), t(z.im))    # (Z/nb, Y/na, X)
+
+    out_spec = P(b, a, None)
+    fn = shard_map_unchecked(body, mesh=mesh, in_specs=(P(a, b, None),) * 2,
+                   out_specs=SplitComplex(out_spec, out_spec))
+    return fn(x.re, x.im)
+
+
+# ---------------------------------------------------------------------------
+# Distributed 1-D four-step FFT
+# ---------------------------------------------------------------------------
+
+def fourstep_split(n: int, p: int) -> tuple:
+    """Pick the (h, w) four-step factorisation of ``n`` on ``p`` devices:
+    start at the flattest shard-compatible shape (p, n/p) and square it up
+    while the column count stays even and shardable.  Deterministic, and
+    mirrored by the tests so layouts agree."""
+    h, w = p, n // p
+    while (w > 2 * h) and (w % 2 == 0) and ((w // 2) % p == 0):
+        h, w = h * 2, w // 2
+    return h, w
+
+
+def _fourstep_twiddle(h: int, w: int, j2, *, inverse: bool, dtype):
+    """T[k1, j2] = exp(-+ 2*pi*i * k1*j2 / n) for the local column block.
+
+    k1*j2 < h*w = n, so the integer product is exact and the angle argument
+    never loses precision to a large-phase reduction.
+    """
+    n = h * w
+    k1 = jnp.arange(h, dtype=jnp.int32)[:, None]
+    prod = (k1 * j2[None, :]).astype(jnp.float32)
+    ang = (2.0 * jnp.pi / n) * prod
+    sign = 1.0 if inverse else -1.0
+    return SplitComplex(jnp.cos(ang).astype(dtype),
+                        (sign * jnp.sin(ang)).astype(dtype))
+
+
+def pfft1d(x: SplitComplex, mesh, axis: str = "data", *,
+           inverse: bool = False, backend: str = "jnp") -> SplitComplex:
+    """One giant 1-D FFT sharded over ``axis``: distributed Bailey four-step.
+
+    The length-n sequence is viewed as an (h, w) matrix (row-major,
+    ``fourstep_split``): column FFTs of length h, the W_n^{k1*j2} twiddle
+    correction, then row FFTs of length w.  The two inter-step transposes
+    are the all_to_alls.  The final four-step output transpose is *not*
+    performed: the result is the (h, w) frequency matrix flattened row-major
+    and row-sharded, i.e. ``out.reshape(h, w).T.ravel()`` is ``fft(x)``.
+    ``inverse=True`` consumes exactly this layout and returns natural-order
+    samples, so forward->inverse roundtrips bit-exactly in layout.
+    """
+    (n,) = x.shape
+    p = mesh.shape[axis]
+    assert n % p == 0, (n, p)
+    h, w = fourstep_split(n, p)
+    assert h % p == 0 and w % p == 0, (h, w, p)
+
+    def fwd(re, im):
+        loc = SplitComplex(re.reshape(h // p, w), im.reshape(h // p, w))
+        zz = _a2a(loc, axis, 1, 0)               # (h, w/p): full columns
+        zz = _fft_axis(zz, 0, inverse=False, backend=backend)
+        d = jax.lax.axis_index(axis)
+        j2 = d * (w // p) + jnp.arange(w // p, dtype=jnp.int32)
+        t = _fourstep_twiddle(h, w, j2, inverse=False, dtype=zz.dtype)
+        zz = SplitComplex(zz.re * t.re - zz.im * t.im,
+                          zz.re * t.im + zz.im * t.re)
+        zz = _a2a(zz, axis, 0, 1)                # (h/p, w): full rows
+        zz = _fft_last(zz, inverse=False, backend=backend)
+        return SplitComplex(zz.re.reshape(-1), zz.im.reshape(-1))
+
+    def inv(re, im):
+        loc = SplitComplex(re.reshape(h // p, w), im.reshape(h // p, w))
+        zz = _fft_last(loc, inverse=True, backend=backend)      # 1/w scale
+        zz = _a2a(zz, axis, 1, 0)                # (h, w/p)
+        d = jax.lax.axis_index(axis)
+        j2 = d * (w // p) + jnp.arange(w // p, dtype=jnp.int32)
+        t = _fourstep_twiddle(h, w, j2, inverse=True, dtype=zz.dtype)
+        zz = SplitComplex(zz.re * t.re - zz.im * t.im,
+                          zz.re * t.im + zz.im * t.re)
+        zz = _fft_axis(zz, 0, inverse=True, backend=backend)    # 1/h scale
+        zz = _a2a(zz, axis, 0, 1)                # (h/p, w)
+        return SplitComplex(zz.re.reshape(-1), zz.im.reshape(-1))
+
+    fn = shard_map_unchecked(inv if inverse else fwd, mesh=mesh,
+                   in_specs=(P(axis), P(axis)),
+                   out_specs=SplitComplex(P(axis), P(axis)))
+    return fn(x.re, x.im)

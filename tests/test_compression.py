@@ -1,9 +1,5 @@
 """Compressed gradient collectives (4 fake devices, subprocess) and the
 error-feedback residual in the train step."""
-import pytest
-
-pytest.importorskip("repro.dist", reason="repro.dist not built yet (ROADMAP)")
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,13 +7,16 @@ import numpy as np
 from _subproc import run_with_devices
 from repro.dist.compression import wire_bytes
 
+# shard_map comes from repro.dist._compat (three homes across jax versions)
+# and the mesh from repro.launch.mesh.make_mesh (axis_types-tolerant).
 CODE = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.dist._compat import shard_map
 from repro.dist.compression import psum_compressed
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 3.0
 want = np.asarray(x.sum(0))
 for method, tol in (("none", 1e-6), ("bf16", 0.1), ("int8", 0.3)):
@@ -38,6 +37,15 @@ def test_wire_bytes():
     tree = {"a": jnp.zeros((4, 8)), "b": jnp.zeros((16,))}
     assert wire_bytes(tree, "none") == 48 * 4
     assert wire_bytes(tree, "bf16") == 48 * 2
+    assert wire_bytes(tree, "int8") == 48
+
+
+def test_wire_bytes_mixed_dtypes():
+    """bf16 compression never inflates an already-narrow leaf."""
+    tree = {"w": jnp.zeros((4, 8), jnp.float32),        # 32 elems x 4 B
+            "b": jnp.zeros((16,), jnp.bfloat16)}        # 16 elems x 2 B
+    assert wire_bytes(tree, "none") == 32 * 4 + 16 * 2
+    assert wire_bytes(tree, "bf16") == 32 * 2 + 16 * 2  # bf16 leaf unchanged
     assert wire_bytes(tree, "int8") == 48
 
 

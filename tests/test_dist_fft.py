@@ -1,18 +1,19 @@
 """Distributed pencil FFT == single-device FFT (8 fake devices, subprocess)."""
-import pytest
-
-pytest.importorskip("repro.dist", reason="repro.dist not built yet (ROADMAP)")
-
 from _subproc import run_with_devices
 
+# Mesh construction goes through repro.launch.mesh.make_mesh and shard_map
+# through repro.dist._compat — never raw jax.make_mesh(axis_types=...) /
+# jax.shard_map, which only exist on some jax versions.
 CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.complexmath import from_complex, to_complex, SplitComplex
+from repro.core import fft2d
 from repro.dist import pencil
+from repro.launch.mesh import make_mesh
 
 rng = np.random.default_rng(0)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 H = W = 128
 x = (rng.standard_normal((H, W)) + 1j*rng.standard_normal((H, W))).astype(np.complex64)
 sh = NamedSharding(mesh, P("data", None))
@@ -29,8 +30,13 @@ back = pencil.pfft2(pencil.pfft2(xs, mesh, "data", transposed_output=False),
                     mesh, "data", inverse=True, transposed_output=False)
 assert np.abs(np.asarray(to_complex(back)) - x).max() < 1e-3
 
+# distributed path is pinned to the single-chip plan-registry path too, not
+# just to numpy: pfft2 == core.fft2 on the same split-complex input
+loc = np.asarray(to_complex(fft2d.fft2(from_complex(jnp.asarray(x)))))
+assert np.abs(got - loc).max()/np.abs(loc).max() < 1e-5
+
 # hierarchical two-hop (2 pods x 4)
-mesh2 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh2 = make_mesh((2, 4), ("pod", "data"))
 shp = NamedSharding(mesh2, P(("pod", "data"), None))
 xs2 = SplitComplex(jax.device_put(jnp.real(jnp.asarray(x)), shp),
                    jax.device_put(jnp.imag(jnp.asarray(x)), shp))
@@ -38,7 +44,7 @@ got = np.asarray(to_complex(pencil.pfft2_hierarchical(xs2, mesh2))).T
 assert np.abs(got - ref).max()/np.abs(ref).max() < 1e-4
 
 # 3-D pencil FFT over a 2-D process grid (the paper's future-work case)
-mesh3 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh3 = make_mesh((2, 4), ("data", "model"))
 X = Y = 16; Z = 32
 x3 = (rng.standard_normal((X, Y, Z)) + 1j*rng.standard_normal((X, Y, Z))).astype(np.complex64)
 sh3 = NamedSharding(mesh3, P("data", "model", None))
@@ -50,7 +56,7 @@ ref3 = np.fft.fftn(x3)
 assert np.abs(got3 - ref3).max()/np.abs(ref3).max() < 1e-4
 
 # distributed 1-D four-step, forward + inverse roundtrip
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 n = 1 << 14
 v = (rng.standard_normal(n) + 1j*rng.standard_normal(n)).astype(np.complex64)
 sh1 = NamedSharding(mesh, P("data"))
@@ -59,6 +65,7 @@ vs = SplitComplex(jax.device_put(vs.re, sh1), jax.device_put(vs.im, sh1))
 out = pencil.pfft1d(vs, mesh, "data")
 p, h, w = 8, 8, n // 8
 while (w > 2*h) and (w % 2 == 0) and ((w//2) % p == 0): h, w = h*2, w//2
+assert (h, w) == pencil.fourstep_split(n, p)
 got = np.asarray(to_complex(out)).reshape(h, w).T.reshape(-1)
 ref1 = np.fft.fft(v)
 assert np.abs(got - ref1).max()/np.abs(ref1).max() < 1e-4
