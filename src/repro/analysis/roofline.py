@@ -5,8 +5,11 @@
     collective term = collective_bytes / (chips x link bw)
 
 All numerators come from the loop-aware HLO analysis (repro.analysis.hloparse)
-of the per-device compiled module, so terms are already per-chip.  Hardware:
-TPU v5e — 197 TFLOP/s bf16 (98.5 f32), 819 GB/s HBM, ~50 GB/s/link ICI.
+of the per-device compiled module, so terms are already per-chip.  Hardware
+numbers come from the multi-arch tables in :mod:`repro.tt.arch` (Wormhole
+n300, Grayskull e150, TPU v5e, Xeon 8160); the module-level ``HW`` dict is
+the TPU v5e entry, kept for the historical callers — pass ``arch=`` to
+:func:`fft2d_roofline` / :func:`roofline_terms` for any other machine.
 
 MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference);
 the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch waste.  The
@@ -20,14 +23,9 @@ import json
 import os
 from typing import List, Optional
 
-HW = {
-    "peak_flops_bf16": 197e12,
-    "peak_flops_f32": 98.5e12,
-    "hbm_bw": 819e9,
-    "ici_bw": 50e9,
-    "hbm_per_chip": 16e9,
-    "chip_power_w": 215.0,
-}
+from repro.tt.arch import hw_table
+
+HW = hw_table("tpu_v5e")
 
 
 def fft2d_traffic_bytes(h: int, w: int, *, elem_bytes: int = 8,
@@ -52,38 +50,43 @@ def fft2d_traffic_bytes(h: int, w: int, *, elem_bytes: int = 8,
 
 
 def fft2d_roofline(h: int, w: int, *, elem_bytes: int = 8,
-                   fused: bool = False, flops: Optional[float] = None) -> dict:
-    """Roofline terms for the 2-D FFT under the traffic model above."""
+                   fused: bool = False, flops: Optional[float] = None,
+                   arch: str = "tpu_v5e") -> dict:
+    """Roofline terms for the 2-D FFT under the traffic model above, on any
+    :mod:`repro.tt.arch` entry (default keeps the historical v5e)."""
     import math
+    hw = hw_table(arch)
     n = h * w
     if flops is None:
         flops = 5.0 * n * math.log2(n)           # canonical 5 N log2 N
     traffic = fft2d_traffic_bytes(h, w, elem_bytes=elem_bytes, fused=fused)
-    compute_s = flops / HW["peak_flops_f32"]
-    memory_s = traffic / HW["hbm_bw"]
+    compute_s = flops / hw["peak_flops_f32"]
+    memory_s = traffic / hw["hbm_bw"]
     step_s = max(compute_s, memory_s)
     return {
+        "arch": arch,
         "flops": flops,
         "traffic_bytes": traffic,
         "compute_s": compute_s,
         "memory_s": memory_s,
         "step_s": step_s,
         "dominant": "memory_s" if memory_s >= compute_s else "compute_s",
-        "energy_j": step_s * HW["chip_power_w"],
+        "energy_j": step_s * hw["chip_power_w"],
     }
 
 
-def roofline_terms(rec: dict) -> Optional[dict]:
+def roofline_terms(rec: dict, *, arch: str = "tpu_v5e") -> Optional[dict]:
     la = rec.get("loop_aware") or {}
     if "flops" not in la:
         return None
+    hw = hw_table(arch)
     chips = rec["devices"] if rec["mesh"] == "2x16x16" else 256
     # per-device numbers from the per-device module
-    peak = (HW["peak_flops_bf16"] if rec.get("dtype") == "bfloat16"
-            else HW["peak_flops_f32"])
+    peak = (hw["peak_flops_bf16"] if rec.get("dtype") == "bfloat16"
+            else hw["peak_flops_f32"])
     compute_s = la["flops"] / peak
-    memory_s = la["traffic_bytes"] / HW["hbm_bw"]
-    collective_s = la["collective_total"] / HW["ici_bw"]
+    memory_s = la["traffic_bytes"] / hw["hbm_bw"]
+    collective_s = la["collective_total"] / hw["ici_bw"]
     terms = {"compute_s": compute_s, "memory_s": memory_s,
              "collective_s": collective_s}
     dominant = max(terms, key=terms.get)
@@ -98,7 +101,7 @@ def roofline_terms(rec: dict) -> Optional[dict]:
         # decode is bandwidth-bound by construction: every active param must
         # be read once per token — the memory roofline is the honest ideal
         pbytes = 2 if rec.get("dtype") == "bfloat16" else 4
-        ideal_mem = rec["n_active"] * pbytes / (chips * HW["hbm_bw"])
+        ideal_mem = rec["n_active"] * pbytes / (chips * hw["hbm_bw"])
         ideal_s = max(ideal_s, ideal_mem)
     step_s = max(terms.values())
     return dict(
@@ -111,7 +114,7 @@ def roofline_terms(rec: dict) -> Optional[dict]:
         step_s=step_s,
         fraction=ideal_s / step_s if step_s else 0.0,
         chips=chips,
-        energy_j=step_s * chips * HW["chip_power_w"],
+        energy_j=step_s * chips * hw["chip_power_w"],
     )
 
 
@@ -127,12 +130,13 @@ def load_records(save_dir: str = "runs/dryrun", mesh: str = "16x16",
     return out
 
 
-def markdown_table(save_dir: str = "runs/dryrun", mesh: str = "16x16") -> str:
+def markdown_table(save_dir: str = "runs/dryrun", mesh: str = "16x16",
+                   arch: str = "tpu_v5e") -> str:
     rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
             "dominant | useful ratio | roofline frac | note |",
             "|---|---|---|---|---|---|---|---|---|"]
     for rec in load_records(save_dir, mesh):
-        t = roofline_terms(rec)
+        t = roofline_terms(rec, arch=arch)
         if t is None:
             rows.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | "
                         f"parse-error | - | - | |")
@@ -163,8 +167,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--save-dir", default="runs/dryrun")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--arch", default="tpu_v5e",
+                    help="any repro.tt.arch entry (wormhole_n300, xeon_8160, ...)")
     args = ap.parse_args()
-    print(markdown_table(args.save_dir, args.mesh))
+    print(markdown_table(args.save_dir, args.mesh, args.arch))
 
 
 if __name__ == "__main__":

@@ -496,7 +496,20 @@ def rfft(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
     both FLOPs and data movement versus a zero-imaginary full FFT
     (beyond-paper: the paper always carries a full imaginary plane).
     Returns the (..., N/2+1) half spectrum.
+
+    ``algo="auto"`` routes through the plan registry under an rfft-kind
+    key, so the inner complex algo (length N/2) is resolved once per
+    (shape, dtype) and the decision is shared with every later call.
     """
+    if algo == "auto":
+        from . import plan as _plan
+        return _plan.get_plan((x.shape[-1],), dtype=x.dtype,
+                              kind="rfft")(x)
+    return _rfft_direct(x, algo=algo)
+
+
+def _rfft_direct(x: jnp.ndarray, *, algo: str) -> SplitComplex:
+    """rfft body with an explicitly resolved inner algo (no registry)."""
     n = x.shape[-1]
     assert n % 2 == 0, "rfft requires even length"
     h = n // 2
@@ -521,9 +534,36 @@ def rfft(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
 
 def irfft(xf: SplitComplex, n: Optional[int] = None, *,
           algo: str = "auto") -> jnp.ndarray:
-    """Inverse real FFT from the (..., N/2+1) half spectrum."""
+    """Inverse real FFT from the (..., N/2+1) half spectrum.
+
+    An explicit even ``n`` truncates or zero-pads the spectrum to n/2+1
+    bins first (numpy semantics).  ``algo="auto"`` routes through the
+    registry's rfft-kind inverse key (the resolved algo is the
+    full-length inner complex ifft)."""
     if n is None:
         n = 2 * (xf.shape[-1] - 1)
+    assert n % 2 == 0, f"irfft requires even output length, got {n}"
+    xf = _fit_half_spectrum(xf, n)
+    if algo == "auto":
+        from . import plan as _plan
+        return _plan.get_plan((n,), dtype=xf.dtype, inverse=True,
+                              kind="rfft")(xf)
+    return _irfft_direct(xf, n, algo=algo)
+
+
+def _fit_half_spectrum(xf: SplitComplex, n: int) -> SplitComplex:
+    """Truncate/zero-pad a half spectrum to the n/2+1 bins of length n."""
+    h = n // 2 + 1
+    bins = xf.shape[-1]
+    if bins == h:
+        return xf
+    if bins > h:
+        return SplitComplex(xf.re[..., :h], xf.im[..., :h])
+    pad = [(0, 0)] * (xf.re.ndim - 1) + [(0, h - bins)]
+    return SplitComplex(jnp.pad(xf.re, pad), jnp.pad(xf.im, pad))
+
+
+def _irfft_direct(xf: SplitComplex, n: int, *, algo: str) -> jnp.ndarray:
     # Hermitian-extend then complex ifft; take the real plane.
     body_r = xf.re[..., 1:-1]
     body_i = xf.im[..., 1:-1]

@@ -90,16 +90,43 @@ def rfft2(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
     """Real-input 2-D FFT: rfft rows (half spectrum), full FFT columns.
 
     Beyond-paper: halves the row-pass FLOPs and — in the distributed
-    version — the transpose all_to_all bytes.
+    version — the transpose all_to_all bytes.  ``algo="auto"`` routes
+    through the registry's rfft-kind (h, w) key: the row-pass inner algo
+    is resolved once per shape, and the column pass composes with the
+    (h,)-key c2c plan.
     """
-    y = fft1d.rfft(x, algo=algo)                       # (..., H, W/2+1)
+    if algo == "auto":
+        from . import plan as _plan
+        return _plan.get_plan(x.shape[-2:], dtype=x.dtype, kind="rfft")(x)
+    return _rfft2_direct(x, row_algo=algo, col_algo=algo)
+
+
+def _rfft2_direct(x: jnp.ndarray, *, row_algo: str,
+                  col_algo: str = "auto") -> SplitComplex:
+    """Execute a resolved rfft2 config.  ``row_algo`` is the inner complex
+    algo of the packed row rfft (explicit, never "auto"); the column pass
+    is an ordinary c2c transform that may route through its own plan key.
+    """
+    y = fft1d._rfft_direct(x, algo=row_algo)           # (..., H, W/2+1)
     y = _swap(y, -1, -2)
-    y = fft1d.fft(y, algo=algo)
+    y = fft1d.fft(y, algo=col_algo)
     return _swap(y, -1, -2)
 
 
 def irfft2(xf: SplitComplex, *, algo: str = "auto") -> jnp.ndarray:
+    if algo == "auto":
+        from . import plan as _plan
+        h = xf.shape[-2]
+        w = 2 * (xf.shape[-1] - 1)
+        return _plan.get_plan((h, w), dtype=xf.dtype, inverse=True,
+                              kind="rfft")(xf)
+    return _irfft2_direct(xf, row_algo=algo, col_algo=algo)
+
+
+def _irfft2_direct(xf: SplitComplex, *, row_algo: str,
+                   col_algo: str = "auto") -> jnp.ndarray:
     y = _swap(xf, -1, -2)
-    y = fft1d.ifft(y, algo=algo)
+    y = fft1d.fft(y, inverse=True, algo=col_algo)
     y = _swap(y, -1, -2)
-    return fft1d.irfft(y, algo=algo)
+    n = 2 * (xf.shape[-1] - 1)
+    return fft1d._irfft_direct(y, n, algo=row_algo)

@@ -19,11 +19,24 @@ backend runs the fused transpose-free kernel
 ``tune=True`` runs an opt-in FFTW-style measuring autotuner: every candidate
 (algo, radix, block_batch) config is timed on synthetic data and the winner
 is recorded in the registry, so the measurement also happens at most once
-per key.
+per key.  ``prune="model"`` first ranks the candidates with the analytical
+Wormhole/Tensix cost model (:func:`repro.tt.trace.predict_cost`) and only
+measures the top-k — cheaper tuning, same measured winner when the model
+ranks sanely (the heuristic default is always kept in the measured set).
+
+Plans with ``kind="rfft"`` cover the real-input transforms: the key
+includes the kind, so ``rfft``/``irfft``/``rfft2``/``irfft2`` resolve their
+inner complex algo once per shape instead of re-deriving it per call.
+
+Tuned winners persist across processes FFTW-"wisdom" style:
+:func:`save_wisdom` / :func:`load_wisdom` round-trip the registry's tuned
+(algo, radix, block_batch) entries as versioned, key-hashed JSON.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import time
 from typing import Dict, Optional, Tuple
 
@@ -40,16 +53,18 @@ def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
-PlanKey = Tuple[Tuple[int, ...], str, bool, str]
+PlanKey = Tuple[Tuple[int, ...], str, bool, str, str]
 
 _PLAN_CACHE: Dict[PlanKey, "FFTPlan"] = {}      # algo="auto" plans
 _OVERRIDE_CACHE: Dict[tuple, "FFTPlan"] = {}    # (key, algo, radix) overrides
 _AUTOTUNE_RUNS: Dict[tuple, int] = {}
 
+PLAN_KINDS = ("c2c", "rfft")
 
-def _plan_key(shape, dtype, inverse, backend) -> PlanKey:
+
+def _plan_key(shape, dtype, inverse, backend, kind="c2c") -> PlanKey:
     return (tuple(int(d) for d in shape), str(jnp.dtype(dtype)),
-            bool(inverse), backend)
+            bool(inverse), backend, kind)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +76,7 @@ class FFTPlan:
     backend: str = "jnp"              # "jnp" | "pallas"
     radix: int = 4                    # Stockham radix (4 = mixed 4/2, 2 = oracle)
     block_batch: int = 8              # pallas batch tile
+    kind: str = "c2c"                 # "c2c" | "rfft" (real input/output)
     tuned: bool = False
     tune_report: Optional[dict] = None   # {candidate label: us} when tuned
 
@@ -87,6 +103,8 @@ class FFTPlan:
     # -- execution -----------------------------------------------------------
 
     def __call__(self, x) -> SplitComplex:
+        if self.kind == "rfft":
+            return self._call_rfft(x)
         assert x.shape[-self.ndim:] == self.shape, (x.shape, self.shape)
         if self.ndim == 2:
             from . import fft2d
@@ -105,34 +123,76 @@ class FFTPlan:
             else self.algo
         return fft1d.fft(x, inverse=self.inverse, algo=algo)
 
+    def _call_rfft(self, x):
+        """Execute a real-input plan: the resolved ``algo`` is the *inner*
+        complex transform of the rfft/irfft axis, passed explicitly so the
+        dispatch decision baked into this plan is never re-derived.  The
+        2-D column pass is a c2c transform with its own registry key and is
+        routed through it (``algo="auto"``), FFTW-style plan composition.
+        """
+        if self.ndim == 1:
+            if self.inverse:            # input: (..., n/2+1) half spectrum
+                assert x.shape[-1] == self.n // 2 + 1, (x.shape, self.shape)
+                return fft1d._irfft_direct(x, self.n, algo=self.algo)
+            assert x.shape[-1] == self.n, (x.shape, self.shape)
+            return fft1d._rfft_direct(x, algo=self.algo)
+        from . import fft2d
+        h, w = self.shape
+        if self.inverse:
+            assert x.shape[-2:] == (h, w // 2 + 1), (x.shape, self.shape)
+            return fft2d._irfft2_direct(x, row_algo=self.algo)
+        assert x.shape[-2:] == (h, w), (x.shape, self.shape)
+        return fft2d._rfft2_direct(x, row_algo=self.algo)
+
 
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
 def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
-             algo: str = "auto", backend: str = "jnp",
-             tune: bool = False, tune_batch: int = 8) -> FFTPlan:
+             algo: str = "auto", backend: str = "jnp", kind: str = "c2c",
+             tune: bool = False, tune_batch: int = 8,
+             prune: str = "none", prune_k: Optional[int] = None,
+             model_arch: str = "tpu_v5e") -> FFTPlan:
     """The registry entry point: return the interned plan for this key,
     resolving (or autotuning) it on first request.
 
-    Keys are (shape, dtype, direction, backend-after-demotion); requests
-    with an explicit ``algo`` are interned separately under (key, algo) and
-    never replace — or inherit — the auto-resolved plan.  The autotuner runs
-    at most once per cache entry; explicit-algo tuning measures only that
-    algo's radix/block_batch variants.  ``tune_batch`` sets the synthetic
-    batch the tuner measures on — pass your workload's batch, since the
-    best (algo, radix, block_batch) config is batch-dependent.
+    Keys are (shape, dtype, direction, backend-after-demotion, kind);
+    requests with an explicit ``algo`` are interned separately under
+    (key, algo) and never replace — or inherit — the auto-resolved plan.
+    The autotuner runs at most once per cache entry; explicit-algo tuning
+    measures only that algo's radix/block_batch variants.  ``tune_batch``
+    sets the synthetic batch the tuner measures on — pass your workload's
+    batch, since the best (algo, radix, block_batch) config is
+    batch-dependent.
+
+    ``kind="rfft"`` interns a real-input plan: ``shape`` is the *real*
+    shape, and the resolved algo is the inner complex transform of the
+    rfft/irfft axis (length n/2 forward, n inverse).
+
+    ``prune="model"`` makes the autotuner rank candidates with the
+    :mod:`repro.tt.trace` cost model on ``model_arch`` and measure only the
+    ``prune_k`` most promising (default: half, min 2 — the heuristic
+    default config is always measured).
     """
     shape = tuple(int(d) for d in shape)
     assert len(shape) in (1, 2), f"1-D or 2-D plans only, got {shape}"
+    assert kind in PLAN_KINDS, f"kind must be one of {PLAN_KINDS}, got {kind}"
+    assert prune in ("none", "model"), prune
     # the kernels need power-of-two tile dims of at least 2 (a unit dim
     # would underflow the tile asserts) — anything else demotes to jnp
     kernel_ok = all(_is_pow2(d) and d >= 2 for d in shape)
     radix = 4
     fixed_radix = False
 
-    if len(shape) == 1:
+    if kind == "rfft":
+        n = shape[-1]
+        assert n % 2 == 0, f"rfft plans need an even last dim, got {shape}"
+        backend = "jnp"          # the rfft pack/untangle has no kernel path
+        inner = n if inverse else n // 2
+        resolved = resolve_algo(inner) if algo == "auto" else algo
+        block_batch = 8
+    elif len(shape) == 1:
         resolved = resolve_algo(shape[0]) if algo == "auto" else algo
         if resolved == "stockham2":   # radix-2 oracle: a stockham radix config
             resolved, radix, fixed_radix = "stockham", 2, True
@@ -159,18 +219,19 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
         # row-tile default (what _fft2_direct actually executes)
         block_batch = 1 if resolved == "fused" else 8
 
-    key = _plan_key(shape, dtype, inverse, backend)
+    key = _plan_key(shape, dtype, inverse, backend, kind)
     cache_key = key if algo == "auto" else key + (resolved, radix)
     cache = _PLAN_CACHE if algo == "auto" else _OVERRIDE_CACHE
     plan = cache.get(cache_key)
     if plan is None:
         plan = FFTPlan(shape=shape, dtype=key[1], inverse=inverse,
                        algo=resolved, radix=radix, backend=backend,
-                       block_batch=block_batch)
+                       block_batch=block_batch, kind=kind)
         cache[cache_key] = plan
     if tune and not plan.tuned:
         plan = _autotune(cache_key, plan, batch=tune_batch,
-                         fixed_algo=algo != "auto", fixed_radix=fixed_radix)
+                         fixed_algo=algo != "auto", fixed_radix=fixed_radix,
+                         prune=prune, prune_k=prune_k, model_arch=model_arch)
         cache[cache_key] = plan
     return plan
 
@@ -186,13 +247,112 @@ def plan_cache_size() -> int:
 
 
 def autotune_count(shape, *, dtype=jnp.float32, inverse: bool = False,
-                   backend: str = "jnp") -> int:
+                   backend: str = "jnp", kind: str = "c2c") -> int:
     """How many times the measuring autotuner ran for this key, counting
     both the auto plan and any explicit-algo override tunes under it.
     ``backend`` is the post-demotion backend (a pallas request that fell
     back to jnp is counted under "jnp")."""
-    base = _plan_key(shape, dtype, inverse, backend)
-    return sum(v for k, v in _AUTOTUNE_RUNS.items() if k[:4] == base)
+    base = _plan_key(shape, dtype, inverse, backend, kind)
+    return sum(v for k, v in _AUTOTUNE_RUNS.items() if k[:5] == base)
+
+
+# ---------------------------------------------------------------------------
+# Wisdom (FFTW-style persisted plans)
+# ---------------------------------------------------------------------------
+
+WISDOM_VERSION = 1
+
+
+def _wisdom_key_str(key: PlanKey) -> str:
+    shape, dtype, inverse, backend, kind = key
+    return (f"shape={'x'.join(map(str, shape))};dtype={dtype};"
+            f"inverse={int(inverse)};backend={backend};kind={kind}")
+
+
+def _wisdom_key_parse(s: str) -> PlanKey:
+    parts = dict(p.split("=", 1) for p in s.split(";"))
+    return (tuple(int(d) for d in parts["shape"].split("x")), parts["dtype"],
+            bool(int(parts["inverse"])), parts["backend"], parts["kind"])
+
+
+def _wisdom_hash(key_str: str, algo, radix, block_batch) -> str:
+    """Guard hash over the version, the key AND the tuned values, so a
+    stale or hand-edited entry (wrong algo for the shape, typo'd radix)
+    cannot install a bogus tuned plan."""
+    payload = f"v{WISDOM_VERSION}:{key_str}:{algo}:{radix}:{block_batch}"
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def save_wisdom(path: str) -> int:
+    """Persist every *tuned* auto-keyed plan to ``path`` as JSON, FFTW
+    "wisdom" style.  Each entry carries a hash of its (version, key) so a
+    stale or hand-edited file cannot silently poison the registry.
+    Returns the number of entries written.
+    """
+    entries = []
+    for key, plan in sorted(_PLAN_CACHE.items(), key=lambda kv: repr(kv[0])):
+        if not plan.tuned:
+            continue
+        ks = _wisdom_key_str(key)
+        entries.append({
+            "key": ks,
+            "key_hash": _wisdom_hash(ks, plan.algo, plan.radix,
+                                     plan.block_batch),
+            "algo": plan.algo, "radix": plan.radix,
+            "block_batch": plan.block_batch,
+            "tune_report": plan.tune_report,
+        })
+    with open(path, "w") as fh:
+        json.dump({"version": WISDOM_VERSION, "entries": entries}, fh,
+                  indent=2)
+        fh.write("\n")
+    return len(entries)
+
+
+def load_wisdom(path: str, *, strict: bool = False) -> int:
+    """Load wisdom saved by :func:`save_wisdom` into the registry.
+
+    Version-mismatched files and hash-mismatched entries are skipped
+    (raised with ``strict=True``); an in-process plan that is *already
+    tuned* is never overwritten — live measurements outrank stored ones.
+    Loaded plans arrive ``tuned=True``, so a later ``tune=True`` request
+    for the same key skips the measuring autotuner entirely.  Returns the
+    number of entries installed.
+    """
+    with open(path) as fh:
+        data = json.load(fh)
+    if data.get("version") != WISDOM_VERSION:
+        if strict:
+            raise ValueError(f"wisdom version {data.get('version')!r} != "
+                             f"{WISDOM_VERSION} in {path}")
+        return 0
+    loaded = 0
+    for e in data.get("entries", ()):
+        try:
+            ks = e["key"]
+            algo = e["algo"]
+            radix = int(e["radix"])
+            block_batch = int(e["block_batch"])
+            if _wisdom_hash(ks, algo, radix, block_batch) != e["key_hash"]:
+                raise ValueError(f"wisdom key-hash mismatch for {ks!r}")
+            key = _wisdom_key_parse(ks)
+        except (KeyError, ValueError, TypeError) as ex:
+            if strict:
+                raise ValueError(f"malformed wisdom entry {e!r}: hash or "
+                                 f"field error ({ex})") from ex
+            continue
+        live = _PLAN_CACHE.get(key)
+        if live is not None and live.tuned:
+            continue
+        report = dict(e.get("tune_report") or {})
+        report.setdefault("winner", "wisdom")
+        report["source"] = "wisdom"
+        _PLAN_CACHE[key] = FFTPlan(
+            shape=key[0], dtype=key[1], inverse=key[2], backend=key[3],
+            kind=key[4], algo=algo, radix=radix,
+            block_batch=block_batch, tuned=True, tune_report=report)
+        loaded += 1
+    return loaded
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +389,10 @@ def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
     would time a strictly larger workload."""
     base = dataclasses.replace
     out = [("default", plan)]
+    if plan.kind == "rfft":
+        # the rfft pack/untangle wraps an inner c2c transform whose own key
+        # is tuned independently; nothing plan-level to vary here
+        return out
     if plan.ndim == 1:
         n = plan.n
         if not _is_pow2(n):
@@ -272,21 +436,67 @@ def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
     return uniq
 
 
+def _model_prune(cands, *, batch: int, prune_k: Optional[int],
+                 model_arch: str):
+    """Rank candidates with the analytic cost model and keep the top-k.
+
+    The heuristic default (candidate 0) is always kept, so pruning can
+    only *add* model-favoured configs to the measured set, never remove
+    the config the registry would have used untuned.  Candidates whose
+    working set busts the arch's SRAM budget rank last (predict_cost is
+    +inf for them).  Returns (kept, pruned_labels).
+    """
+    if len(cands) <= 2:
+        return cands, []
+    from repro.tt.trace import predict_cost
+    k = prune_k if prune_k is not None else max(2, (len(cands) + 1) // 2)
+    k = max(2, min(k, len(cands)))
+    if k >= len(cands):
+        return cands, []
+    costs = [predict_cost(c, arch=model_arch, batch=batch)
+             for _, c in cands]
+    rest = sorted(range(1, len(cands)), key=costs.__getitem__)
+    keep_idx = sorted([0] + rest[:k - 1])
+    kept = [cands[i] for i in keep_idx]
+    pruned = [cands[i][0] for i in range(len(cands)) if i not in keep_idx]
+    return kept, pruned
+
+
 def _autotune(key, plan: FFTPlan, *, batch: int = 8,
-              fixed_algo: bool = False, fixed_radix: bool = False) -> FFTPlan:
-    """Measure every candidate config and return the winner (tuned=True)."""
+              fixed_algo: bool = False, fixed_radix: bool = False,
+              prune: str = "none", prune_k: Optional[int] = None,
+              model_arch: str = "tpu_v5e") -> FFTPlan:
+    """Measure every candidate config (or, with ``prune="model"``, the
+    model-ranked top-k) and return the winner (tuned=True)."""
     _AUTOTUNE_RUNS[key] = _AUTOTUNE_RUNS.get(key, 0) + 1
     rng = np.random.default_rng(0)
     shp = (batch,) + plan.shape
     dt = jnp.dtype(plan.dtype)
-    x = SplitComplex(jnp.asarray(rng.standard_normal(shp), dt),
-                     jnp.asarray(rng.standard_normal(shp), dt))
+    if plan.kind == "rfft":
+        x = jnp.asarray(rng.standard_normal(shp), dt)
+        if plan.inverse:                       # half-spectrum input
+            hshp = shp[:-1] + (plan.shape[-1] // 2 + 1,)
+            x = SplitComplex(jnp.asarray(rng.standard_normal(hshp), dt),
+                             jnp.asarray(rng.standard_normal(hshp), dt))
+    else:
+        x = SplitComplex(jnp.asarray(rng.standard_normal(shp), dt),
+                         jnp.asarray(rng.standard_normal(shp), dt))
     cands = _candidates(plan, fixed_algo=fixed_algo, fixed_radix=fixed_radix,
                         batch=batch)
+    n_all = len(cands)
+    pruned_labels = []
+    if prune == "model":
+        cands, pruned_labels = _model_prune(cands, batch=batch,
+                                            prune_k=prune_k,
+                                            model_arch=model_arch)
     times = _time_candidates([c for _, c in cands], x)
     report = {label: round(us, 1) for (label, _), us in zip(cands, times)}
     best = min(range(len(cands)), key=times.__getitem__)
     report["winner"] = cands[best][0]
+    report["n_candidates"] = n_all
+    report["n_measured"] = len(cands)
+    if pruned_labels:
+        report["model_pruned"] = "|".join(pruned_labels)
     return dataclasses.replace(cands[best][1], tuned=True, tune_report=report)
 
 

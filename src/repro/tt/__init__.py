@@ -1,0 +1,41 @@
+"""repro.tt — analytical Wormhole/Tensix data-movement & energy model.
+
+The paper's central claim is about *data movement and energy*, not raw
+speed: the Tensix architecture decouples movement from compute, and the
+Wormhole n300 draws ~8x less power and ~2.8x less energy than a 24-core
+Xeon on the 2-D FFT (§6).  This package turns that claim — and the §5
+data-movement bottlenecks — into testable model queries:
+
+- :mod:`repro.tt.arch`    parameterised hardware tables (Wormhole n300,
+                          Grayskull e150, TPU v5e, Xeon 8160) with peak
+                          FLOP/s, DRAM/NoC bandwidths, power and pJ/op
+                          energy terms, plus the paper's published §6
+                          measurement anchors.
+- :mod:`repro.tt.tensix`  the five-unit unpacker -> math -> packer backend
+                          pipeline as a timeline with circular-buffer
+                          double-buffering (the tt-sim backend split).
+- :mod:`repro.tt.noc`     tile-granular NoC transfer / global-transpose /
+                          all_to_all model (compressed collectives reuse
+                          :func:`repro.dist.compression.wire_bytes`).
+- :mod:`repro.tt.trace`   walk an :class:`repro.core.plan.FFTPlan` into a
+                          stage-level trace: per-stage bytes, seconds,
+                          SRAM high-water mark vs budget, energy integral.
+- :mod:`repro.tt.report`  markdown/JSON emitters reproducing the paper's
+                          Wormhole-vs-Xeon time/power/energy table.
+
+Consumers: :mod:`repro.analysis.roofline` builds its HW dict from
+:func:`repro.tt.arch.hw_table`, and the plan autotuner's ``prune="model"``
+mode ranks candidates with :func:`repro.tt.trace.predict_cost` before
+measuring only the top-k.
+"""
+from . import arch, noc, report, tensix, trace
+from .arch import Arch, ARCHS, get_arch, register_arch, hw_table
+from .tensix import PipelineTimeline, pipeline_timeline
+from .trace import PlanTrace, TraceStage, trace_plan, predict_cost
+
+__all__ = [
+    "arch", "noc", "report", "tensix", "trace",
+    "Arch", "ARCHS", "get_arch", "register_arch", "hw_table",
+    "PipelineTimeline", "pipeline_timeline",
+    "PlanTrace", "TraceStage", "trace_plan", "predict_cost",
+]

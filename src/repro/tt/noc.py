@@ -1,0 +1,103 @@
+"""Tile-granular NoC transfer model: point-to-point, global transpose,
+and compressed all_to_all.
+
+The Wormhole routes 32x32 tiles over two toroidal NoCs laid over the
+physical core grid (``arch.noc_grid``).  The §5 bottleneck — the global
+transpose between the row and column FFT passes — is an all-to-all over
+that grid: with the image row-banded over P cores, a fraction (P-1)/P of
+every plane must cross the NoC, and the sustained rate is set by the
+mesh bisection, not the per-link rate.
+
+The distributed-pencil exchanges of :mod:`repro.dist.pencil` reuse the
+same math at device granularity via :func:`all_to_all_s`, whose wire
+volume comes from :func:`repro.dist.compression.wire_bytes` so the
+bf16/int8 compressed collectives are priced exactly as the training
+stack ships them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+from .arch import get_arch
+from .tensix import TILE_DIM, TILE_ELEMS
+
+
+def mean_hops(grid: Tuple[int, int]) -> float:
+    """Mean Manhattan hop count between two uniformly random cores of a
+    ``(gx, gy)`` torus (each axis contributes ~extent/4)."""
+    gx, gy = grid
+    return (gx / 4.0) + (gy / 4.0)
+
+
+def bisection_bw(arch) -> float:
+    """Aggregate bytes/s across the mesh bisection: links crossing the cut
+    (the shorter grid axis), both toroidal directions, both NoCs."""
+    a = get_arch(arch)
+    gx, gy = a.noc_grid
+    cut_links = max(1, min(gx, gy)) * 2        # torus: two crossings per row
+    nocs = 2 if a.kind == "tensix" else 1      # NoC0 + NoC1
+    return cut_links * nocs * a.noc_bw
+
+
+def transfer_s(nbytes: float, arch, *, hops: Optional[float] = None) -> float:
+    """Point-to-point transfer: per-hop latency plus serialisation."""
+    a = get_arch(arch)
+    if hops is None:
+        hops = mean_hops(a.noc_grid)
+    return hops * a.noc_latency_s + nbytes / a.noc_bw
+
+
+def n_tiles(h: int, w: int) -> int:
+    return math.ceil(h / TILE_DIM) * math.ceil(w / TILE_DIM)
+
+
+def global_transpose(h: int, w: int, *, arch, elem_bytes: int = 8) -> dict:
+    """The §5 global transpose of one (h, w) split-complex plane.
+
+    The plane is row-banded over the cores; transposing moves every tile
+    whose destination band differs from its source band — (P-1)/P of the
+    plane — across the NoC at bisection rate, plus per-tile routing
+    latency amortised over the many tiles in flight (one mean-hop charge
+    per wavefront of P tiles).
+    """
+    a = get_arch(arch)
+    p = max(1, a.cores)
+    plane = float(h) * float(w) * elem_bytes
+    cross = plane * (p - 1) / p
+    tiles = n_tiles(h, w)
+    lat = mean_hops(a.noc_grid) * a.noc_latency_s * max(1, tiles // p)
+    return {
+        "noc_bytes": cross,
+        "tiles": tiles,
+        "seconds": lat + cross / bisection_bw(a),
+    }
+
+
+def all_to_all_s(tree_or_bytes, devices: int, arch, *,
+                 method: str = "none") -> dict:
+    """One all_to_all over ``devices`` chips (the pencil-FFT exchange).
+
+    ``tree_or_bytes`` is either a pytree (priced per device through
+    :func:`repro.dist.compression.wire_bytes`, honouring the compressed
+    wire format) or a plain per-device byte count.  Each device keeps its
+    diagonal block, so (devices-1)/devices of the payload crosses the
+    off-chip links.
+    """
+    import numpy as np
+    from repro.dist.compression import wire_bytes
+    a = get_arch(arch)
+    if isinstance(tree_or_bytes, (int, float)):
+        # scalar payloads are f32 bytes; derive the wire factor from
+        # wire_bytes itself so the two models can never drift
+        probe = np.zeros((1,), np.float32)
+        per_device = float(tree_or_bytes) \
+            * wire_bytes(probe, method) / wire_bytes(probe, "none")
+    else:
+        per_device = float(wire_bytes(tree_or_bytes, method))
+    wire = per_device * max(0, devices - 1) / max(1, devices)
+    return {
+        "wire_bytes": wire,
+        "seconds": wire / a.link_bw + a.noc_latency_s * max(0, devices - 1),
+        "method": method,
+    }

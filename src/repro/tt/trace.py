@@ -1,0 +1,414 @@
+"""Walk an FFTPlan into a stage-level time / traffic / energy trace.
+
+Each :class:`TraceStage` is one sequentially-executed step of the plan —
+a kernel launch group, a global transpose, an HBM round-trip — annotated
+with the FLOPs and bytes it moves at every level of the hierarchy (DRAM,
+NoC, core-local SRAM), its modelled wall time on the chosen
+:class:`repro.tt.arch.Arch`, and its energy integral.  The fused 2-D
+kernel traces to a *single* stage while the transpose-based path traces
+to four: the collapse of the stage list is the paper's §5 optimisation
+made visible.
+
+Time per stage:
+
+- ``kind == "tensix"`` — the five-unit pipeline timeline of
+  :mod:`repro.tt.tensix` (unpacker/math/packer with double-buffered
+  circular buffers; DRAM movers at the ends), plus NoC time where a
+  stage crosses the mesh.
+- ``kind in ("tpu", "cpu")`` — a per-stage roofline:
+  max(compute, DRAM, SRAM, NoC) + launch overhead.
+
+Energy per stage: pJ/op coefficients from the arch table times the op
+counts, plus idle power burning for the stage's duration.  SRAM
+high-water marks are checked against the arch budget (1.5 MB/core L1 on
+Tensix, 16 MiB VMEM on TPU): a plan that does not fit gets
+``fits=False`` and an infinite :func:`predict_cost`, which is how the
+ROADMAP's "does the 1024x1024 fused tile fit?" question becomes a model
+query.  ``prune="model"`` in :func:`repro.core.plan.get_plan` ranks
+autotune candidates with :func:`predict_cost`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+from .arch import Arch, get_arch
+from . import noc as ttnoc
+from . import tensix as tt
+
+
+def _log2(n: int) -> int:
+    return int(n).bit_length() - 1
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def fft_flops(n: int) -> float:
+    """Canonical 5 N log2 N real-op count of one complex FFT."""
+    return 5.0 * n * _log2(n) if n > 1 else 0.0
+
+
+def stockham_stage_count(n: int, radix: int) -> int:
+    if radix == 2:
+        return _log2(n)
+    from repro.core.twiddle import stockham_radices
+    return len(stockham_radices(n))
+
+
+def twiddle_bytes(n: int, radix: int, *, elem_bytes: int = 4) -> int:
+    """Bytes of the packed twiddle tables staged alongside the data
+    (wr+wi planes; see :mod:`repro.core.twiddle`)."""
+    if n < 4:
+        return 2 * max(n // 4, 1) * elem_bytes
+    if radix == 2:
+        return 2 * _log2(n) * (n // 2) * elem_bytes
+    s4 = _log2(n) // 2
+    return 2 * s4 * 3 * (n // 4) * elem_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceStage:
+    name: str
+    seconds: float
+    flops: float = 0.0
+    dram_bytes: float = 0.0          # DRAM read + write
+    noc_bytes: float = 0.0           # bytes crossing the NoC/mesh
+    sram_bytes: float = 0.0          # core-local SRAM traffic (read + write)
+    sram_high_water: int = 0         # peak live working set of this stage
+    energy_j: float = 0.0
+    bound: str = ""                  # what set the stage's rate
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanTrace:
+    arch: str
+    shape: Tuple[int, ...]
+    batch: int
+    algo: str
+    radix: int
+    block_batch: int
+    backend: str
+    stages: Tuple[TraceStage, ...]
+    sram_budget: int
+
+    @property
+    def seconds(self) -> float:
+        return sum(s.seconds for s in self.stages)
+
+    @property
+    def flops(self) -> float:
+        return sum(s.flops for s in self.stages)
+
+    @property
+    def dram_bytes(self) -> float:
+        return sum(s.dram_bytes for s in self.stages)
+
+    @property
+    def noc_bytes(self) -> float:
+        return sum(s.noc_bytes for s in self.stages)
+
+    @property
+    def energy_j(self) -> float:
+        return sum(s.energy_j for s in self.stages)
+
+    @property
+    def sram_high_water(self) -> int:
+        return max((s.sram_high_water for s in self.stages), default=0)
+
+    @property
+    def fits(self) -> bool:
+        return self.sram_high_water <= self.sram_budget
+
+    @property
+    def power_w(self) -> float:
+        return self.energy_j / self.seconds if self.seconds > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": list(self.shape), "batch": self.batch,
+            "algo": self.algo, "radix": self.radix,
+            "block_batch": self.block_batch, "backend": self.backend,
+            "seconds": self.seconds, "flops": self.flops,
+            "dram_bytes": self.dram_bytes, "noc_bytes": self.noc_bytes,
+            "energy_j": self.energy_j, "power_w": self.power_w,
+            "sram_high_water": self.sram_high_water,
+            "sram_budget": self.sram_budget, "fits": self.fits,
+            "stages": [s.to_dict() for s in self.stages],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Stage construction
+# ---------------------------------------------------------------------------
+
+def _mk_stage(name: str, arch: Arch, *, flops: float = 0.0,
+              dram_in: float = 0.0, dram_out: float = 0.0,
+              sram_read: float = 0.0, sram_write: float = 0.0,
+              sram_high_water: int = 0, noc_bytes: float = 0.0,
+              noc_s: float = 0.0, launches: int = 1,
+              grid_steps: int = 0) -> TraceStage:
+    overhead = launches * arch.launch_overhead_s \
+        + grid_steps * arch.launch_overhead_s / 8.0
+    if arch.kind == "tensix":
+        tl = tt.kernel_timeline(flops=flops, dram_in=dram_in,
+                                dram_out=dram_out, sram_read=sram_read,
+                                sram_write=sram_write, arch=arch)
+        busy = tl.total_s
+        bound = tl.bottleneck if busy >= noc_s else "noc"
+        seconds = max(busy, noc_s) + overhead
+    else:
+        terms = {
+            "math": flops / arch.peak_flops_f32,
+            "dram": (dram_in + dram_out) / arch.dram_bw,
+            "sram": (sram_read + sram_write) / (arch.l1_bw * arch.cores),
+            "noc": noc_s,
+        }
+        bound = max(terms, key=terms.get)
+        seconds = max(terms.values()) + overhead
+    energy = (flops * arch.energy_per_flop_j
+              + (dram_in + dram_out) * arch.energy_per_dram_byte_j
+              + noc_bytes * arch.energy_per_noc_byte_j
+              + (sram_read + sram_write) * arch.energy_per_sram_byte_j
+              + arch.idle_power_w * seconds)
+    return TraceStage(name=name, seconds=seconds, flops=flops,
+                      dram_bytes=dram_in + dram_out, noc_bytes=noc_bytes,
+                      sram_bytes=sram_read + sram_write,
+                      sram_high_water=int(sram_high_water),
+                      energy_j=energy, bound=bound)
+
+
+def _fft_pass_stage(name: str, arch: Arch, *, n: int, rows: int, algo: str,
+                    radix: int, block_batch: int,
+                    elem_bytes: int = 8) -> TraceStage:
+    """One batched 1-D FFT pass: ``rows`` transforms of length ``n``.
+
+    ``elem_bytes`` is per split-complex element (re+im), 8 for float32.
+    Covers every 1-D algo the plan registry dispatches; used both for 1-D
+    plans and for the row/column passes of the 2-D row-column path.
+    """
+    if algo == "auto":
+        from repro.core.fft1d import resolve_algo
+        algo = resolve_algo(n)
+    plane = float(rows) * n * elem_bytes
+    bb = max(1, min(block_batch, rows))
+    grid_steps = math.ceil(rows / bb)
+    half = elem_bytes // 2                    # bytes per component plane elem
+
+    if algo in ("stockham", "stockham2", "cooley_tukey", "cooley_tukey_fused"):
+        r = 2 if algo == "stockham2" else radix
+        stages = stockham_stage_count(n, r)
+        if algo.startswith("cooley_tukey"):   # explicit reorder copies on top
+            stages = _log2(n) * (2 if algo == "cooley_tukey" else 1)
+            r = 2
+        tw = twiddle_bytes(n, r, elem_bytes=half)
+        return _mk_stage(name, arch, flops=rows * fft_flops(n),
+                         dram_in=plane + tw, dram_out=plane,
+                         sram_read=stages * plane, sram_write=stages * plane,
+                         sram_high_water=bb * n * elem_bytes * 2 + tw,
+                         grid_steps=grid_steps)
+    if algo == "four_step":
+        from repro.core.fft1d import _best_split
+        n1 = _best_split(n)
+        n2 = n // max(n1, 1)
+        if n1 <= 1:                            # prime: bluestein fallback
+            return _fft_pass_stage(name, arch, n=n, rows=rows,
+                                   algo="bluestein", radix=radix,
+                                   block_batch=block_batch,
+                                   elem_bytes=elem_bytes)
+        flops = rows * (8.0 * n * (n1 + n2) + 6.0 * n)
+        mats = (n1 * n1 + n2 * n2) * elem_bytes
+        return _mk_stage(name, arch, flops=flops,
+                         dram_in=plane + mats, dram_out=plane,
+                         sram_read=3 * plane, sram_write=3 * plane,
+                         sram_high_water=bb * n * elem_bytes * 2 + mats,
+                         grid_steps=grid_steps)
+    if algo == "naive":
+        mat = float(n) * n * elem_bytes
+        return _mk_stage(name, arch, flops=rows * 8.0 * n * n,
+                         dram_in=plane + mat, dram_out=plane,
+                         sram_read=plane + mat, sram_write=plane,
+                         sram_high_water=int(mat) + bb * n * elem_bytes * 2,
+                         grid_steps=grid_steps)
+    if algo == "bluestein":
+        m = 1 << int(math.ceil(math.log2(max(2 * n - 1, 2))))
+        mplane = float(rows) * m * elem_bytes
+        stages = 3 * stockham_stage_count(m, 4)
+        tw = twiddle_bytes(m, 4, elem_bytes=half)
+        return _mk_stage(name, arch, flops=rows * (3 * fft_flops(m) + 10.0 * m),
+                         dram_in=plane + tw, dram_out=plane,
+                         sram_read=stages * mplane, sram_write=stages * mplane,
+                         sram_high_water=bb * m * elem_bytes * 2 + tw,
+                         grid_steps=grid_steps)
+    raise ValueError(f"no trace model for 1-D algo {algo!r}")
+
+
+def _transpose_stage(name: str, arch: Arch, *, h: int, w: int, batch: int,
+                     elem_bytes: int = 8) -> TraceStage:
+    """The global transpose between the two passes of the row-column path:
+    a full plane DRAM round-trip, and on a Tensix mesh additionally an
+    all-to-all of (P-1)/P of the plane across the NoC (§5)."""
+    plane = float(batch) * h * w * elem_bytes
+    noc_bytes = noc_s = 0.0
+    if arch.kind == "tensix":
+        x = ttnoc.global_transpose(h, w, arch=arch, elem_bytes=elem_bytes)
+        noc_bytes = batch * x["noc_bytes"]
+        noc_s = batch * x["seconds"]
+    return _mk_stage(name, arch, dram_in=plane, dram_out=plane,
+                     noc_bytes=noc_bytes, noc_s=noc_s,
+                     sram_high_water=2 * tt.TILE_ELEMS * elem_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Plan walkers
+# ---------------------------------------------------------------------------
+
+def trace_plan(plan, *, arch="wormhole_n300", batch: int = 1) -> PlanTrace:
+    """Trace one :class:`repro.core.plan.FFTPlan` (any object exposing
+    ``shape / algo / radix / block_batch / backend``, plus ``kind`` and
+    ``inverse`` for rfft plans) on ``arch``.
+
+    ``batch`` is the number of independent transforms executed together
+    (the leading batch dim).  rfft-kind plans trace their actual schedule
+    — inner half-length complex pass plus the O(n) untangle, half-width
+    spectrum planes downstream — so the half-spectrum saving shows up in
+    the bytes, not as a fudge factor.
+    """
+    a = get_arch(arch)
+    elem = 8                                   # split-complex f32: re+im
+    stages: List[TraceStage] = []
+
+    if getattr(plan, "kind", "c2c") == "rfft":
+        stages = _rfft_stages(plan, a, batch=batch, elem_bytes=elem)
+    elif len(plan.shape) == 1:
+        n = plan.shape[0]
+        stages.append(_fft_pass_stage(
+            f"fft1d_{plan.algo}", a, n=n, rows=batch, algo=plan.algo,
+            radix=plan.radix, block_batch=plan.block_batch,
+            elem_bytes=elem))
+    else:
+        h, w = plan.shape
+        if plan.algo == "fused":
+            stages.append(_fused2d_stage(a, h=h, w=w, batch=batch,
+                                         radix=plan.radix,
+                                         block_batch=plan.block_batch,
+                                         elem_bytes=elem))
+        elif plan.algo in ("row_col", "auto"):
+            bb = plan.block_batch
+            stages.append(_fft_pass_stage(
+                "row_fft", a, n=w, rows=batch * h,
+                algo="stockham" if plan.backend == "pallas" else "auto",
+                radix=plan.radix, block_batch=bb, elem_bytes=elem))
+            stages.append(_transpose_stage("global_transpose", a, h=h, w=w,
+                                           batch=batch, elem_bytes=elem))
+            stages.append(_fft_pass_stage(
+                "col_fft", a, n=h, rows=batch * w,
+                algo="stockham" if plan.backend == "pallas" else "auto",
+                radix=plan.radix, block_batch=bb, elem_bytes=elem))
+            stages.append(_transpose_stage("output_transpose", a, h=w, w=h,
+                                           batch=batch, elem_bytes=elem))
+        else:
+            raise ValueError(f"no trace model for 2-D algo {plan.algo!r}")
+
+    return PlanTrace(arch=a.name, shape=tuple(plan.shape), batch=batch,
+                     algo=plan.algo, radix=plan.radix,
+                     block_batch=plan.block_batch, backend=plan.backend,
+                     stages=tuple(stages), sram_budget=a.sram_budget)
+
+
+def _untangle_stage(name: str, a: Arch, *, n: int, rows: int,
+                    elem_bytes: int) -> TraceStage:
+    """The O(n) rfft pack/untangle (or irfft Hermitian extension): one
+    pointwise pass over the half spectrum."""
+    half = float(rows) * (n // 2 + 1) * elem_bytes
+    return _mk_stage(name, a, flops=10.0 * rows * (n // 2),
+                     dram_in=half, dram_out=half,
+                     sram_read=half, sram_write=half,
+                     sram_high_water=2 * (n // 2 + 1) * elem_bytes)
+
+
+def _rfft_stages(plan, a: Arch, *, batch: int,
+                 elem_bytes: int) -> List[TraceStage]:
+    """The real-input schedules as executed by :mod:`repro.core.fft1d` /
+    :mod:`repro.core.fft2d`: ``plan.algo`` is the *inner* complex algo —
+    half-length (n/2) for the forward packed rfft, full-length for the
+    inverse's Hermitian-extended ifft.  The 2-D row pass works on the
+    real axis, the column pass on the (w/2+1)-wide half spectrum — the
+    halved-transpose-bytes saving the ROADMAP notes for dist.rfft2.
+    """
+    kw = dict(radix=plan.radix, block_batch=plan.block_batch,
+              elem_bytes=elem_bytes)
+    if plan.ndim == 1:
+        n = plan.shape[0]
+        inner = n if plan.inverse else n // 2
+        tag = "irfft" if plan.inverse else "rfft"
+        return [
+            _fft_pass_stage(f"{tag}_inner_{plan.algo}", a, n=inner,
+                            rows=batch, algo=plan.algo, **kw),
+            _untangle_stage(f"{tag}_untangle", a, n=n, rows=batch,
+                            elem_bytes=elem_bytes),
+        ]
+    h, w = plan.shape
+    wh = w // 2 + 1
+    if plan.inverse:
+        return [
+            _fft_pass_stage("col_ifft", a, n=h, rows=batch * wh,
+                            algo="auto", **kw),
+            _transpose_stage("global_transpose", a, h=h, w=wh, batch=batch,
+                             elem_bytes=elem_bytes),
+            _fft_pass_stage(f"irfft_rows_{plan.algo}", a, n=w,
+                            rows=batch * h, algo=plan.algo, **kw),
+            _untangle_stage("irfft_extend", a, n=w, rows=batch * h,
+                            elem_bytes=elem_bytes),
+        ]
+    return [
+        _fft_pass_stage(f"rfft_rows_{plan.algo}", a, n=w // 2,
+                        rows=batch * h, algo=plan.algo, **kw),
+        _untangle_stage("rfft_untangle", a, n=w, rows=batch * h,
+                        elem_bytes=elem_bytes),
+        _transpose_stage("global_transpose", a, h=h, w=wh, batch=batch,
+                         elem_bytes=elem_bytes),
+        _fft_pass_stage("col_fft", a, n=h, rows=batch * wh, algo="auto",
+                        **kw),
+    ]
+
+
+def _fused2d_stage(a: Arch, *, h: int, w: int, batch: int, radix: int,
+                   block_batch: int, elem_bytes: int) -> TraceStage:
+    """The fused transpose-free 2-D kernel: one stage, 2 DRAM plane
+    traversals (read + write), everything else VMEM/L1-resident — row
+    pass, in-SRAM tile transpose, column pass
+    (:mod:`repro.kernels.fft2d_fused`)."""
+    plane = float(h) * w * elem_bytes              # one split-complex image
+    total = batch * plane
+    bb = max(1, min(block_batch, batch))
+    grid_steps = math.ceil(batch / bb)
+    half = elem_bytes // 2
+    tw = twiddle_bytes(w, radix, elem_bytes=half) \
+        + twiddle_bytes(h, radix, elem_bytes=half)
+    s_passes = stockham_stage_count(w, radix) + stockham_stage_count(h, radix)
+    # each Stockham stage reads+writes the tile in SRAM; the tile transpose
+    # adds one more read+write — the round-trip this kernel keeps off DRAM
+    sram_rw = (s_passes + 1) * total
+    # ping-pong working set: the live tile plus the stage being written,
+    # i.e. 2 planes per image in the block, plus both twiddle tables —
+    # 2 x 8 MiB at 1024x1024/bb=1, the ROADMAP's 16 MiB VMEM question
+    high_water = 2 * bb * int(h * w * elem_bytes) + tw
+    return _mk_stage("fused_fft2d", a,
+                     flops=batch * fft_flops(h * w),
+                     dram_in=total + tw, dram_out=total,
+                     sram_read=sram_rw, sram_write=sram_rw,
+                     sram_high_water=high_water, grid_steps=grid_steps)
+
+
+def predict_cost(plan, *, arch="wormhole_n300", batch: int = 1) -> float:
+    """Model cost for autotune ranking: predicted seconds, or +inf when the
+    working set busts the arch's SRAM budget (an unrunnable plan must never
+    outrank a runnable one)."""
+    t = trace_plan(plan, arch=arch, batch=batch)
+    return t.seconds if t.fits else float("inf")

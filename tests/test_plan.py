@@ -1,12 +1,14 @@
-"""FFTPlan dispatch: algo auto-selection, the registry cache, the autotuner,
-and the Pallas backend."""
+"""FFTPlan dispatch: algo auto-selection, the registry cache, the autotuner
+(including model pruning), wisdom persistence, rfft-kind plans, and the
+Pallas backend."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (FFTPlan, autotune_count, clear_plan_cache, fft,
-                        from_complex, get_plan, plan_fft, plan_fft2,
-                        plan_ifft, resolve_algo, to_complex)
+                        from_complex, get_plan, load_wisdom, plan_fft,
+                        plan_fft2, plan_ifft, resolve_algo, save_wisdom,
+                        to_complex)
 
 
 def test_auto_algo_selection():
@@ -102,6 +104,110 @@ def test_autotune_runs_at_most_once_per_key():
     assert autotune_count((256,)) == 1
     # un-tuned request for the same key also reuses the tuned plan
     assert plan_fft(256) is p1
+
+
+def test_model_prune_measures_fewer_same_winner():
+    """Acceptance: prune="model" measures strictly fewer candidates than
+    the full tuner and still lands on the same winner of the
+    fused-vs-transpose decision at 512x512."""
+    clear_plan_cache()
+    full = get_plan((512, 512), backend="pallas", tune=True, tune_batch=2)
+    clear_plan_cache()
+    pruned = get_plan((512, 512), backend="pallas", tune=True, tune_batch=2,
+                      prune="model")
+    clear_plan_cache()
+    assert full.tune_report["n_measured"] == full.tune_report["n_candidates"]
+    assert pruned.tune_report["n_measured"] < full.tune_report["n_measured"]
+    assert pruned.tune_report["n_candidates"] == \
+        full.tune_report["n_candidates"]
+    assert "model_pruned" in pruned.tune_report
+    # same winner of the fused-vs-transpose decision
+    assert full.algo == pruned.algo == "fused"
+    # the heuristic default config is always in the measured set
+    assert "default" in pruned.tune_report
+
+
+def test_wisdom_roundtrip_skips_remeasure(tmp_path):
+    path = str(tmp_path / "wisdom.json")
+    clear_plan_cache()
+    tuned = get_plan((256,), tune=True)
+    assert save_wisdom(path) == 1
+    clear_plan_cache()
+    assert load_wisdom(path) == 1
+    again = get_plan((256,), tune=True)       # must not re-measure
+    assert again.tuned and again.tune_report["source"] == "wisdom"
+    assert autotune_count((256,)) == 0
+    assert (again.algo, again.radix, again.block_batch) == \
+        (tuned.algo, tuned.radix, tuned.block_batch)
+    clear_plan_cache()
+
+
+def test_wisdom_version_and_hash_guards(tmp_path):
+    import json
+    from repro.core import plan as plan_mod
+    path = str(tmp_path / "wisdom.json")
+    clear_plan_cache()
+    get_plan((256,), tune=True)
+    save_wisdom(path)
+    clear_plan_cache()
+    # stale version: refused (0 loaded), strict raises
+    data = json.load(open(path))
+    data["version"] = plan_mod.WISDOM_VERSION + 1
+    json.dump(data, open(path, "w"))
+    assert load_wisdom(path) == 0
+    with pytest.raises(ValueError, match="version"):
+        load_wisdom(path, strict=True)
+    # tampered key: entry skipped by the hash guard
+    data["version"] = plan_mod.WISDOM_VERSION
+    good = dict(data["entries"][0])
+    data["entries"][0]["key"] = data["entries"][0]["key"].replace("256", "512")
+    json.dump(data, open(path, "w"))
+    assert load_wisdom(path) == 0
+    with pytest.raises(ValueError, match="hash"):
+        load_wisdom(path, strict=True)
+    # tampered *value* (the hash covers algo/radix/block_batch too), and a
+    # malformed entry: both skipped without strict, raised with it
+    data["entries"] = [dict(good, algo="fused"), {"key": good["key"]}]
+    json.dump(data, open(path, "w"))
+    assert load_wisdom(path) == 0
+    with pytest.raises(ValueError):
+        load_wisdom(path, strict=True)
+    clear_plan_cache()
+
+
+def test_rfft_kind_interned_separately():
+    """rfft/irfft/rfft2/irfft2 resolve once under kind="rfft" keys that
+    never collide with the c2c plans of the same shape."""
+    clear_plan_cache()
+    r = get_plan((512,), kind="rfft")
+    c = get_plan((512,))
+    assert r is not c and r.kind == "rfft" and c.kind == "c2c"
+    assert r is get_plan((512,), kind="rfft")
+    # forward resolves the inner half-length transform, inverse full-length
+    assert r.algo == resolve_algo(256)
+    ri = get_plan((512,), kind="rfft", inverse=True)
+    assert ri.algo == resolve_algo(512)
+    r2 = get_plan((64, 128), kind="rfft")
+    assert r2 is get_plan((64, 128), kind="rfft")
+    clear_plan_cache()
+
+
+def test_rfft_plan_executes_correctly():
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((3, 256)).astype(np.float32)
+    from repro.core import irfft, rfft
+    got = np.asarray(to_complex(rfft(jnp.asarray(x))))
+    ref = np.fft.rfft(x)
+    np.testing.assert_allclose(got, ref, atol=5e-4 * np.abs(ref).max())
+    back = np.asarray(irfft(rfft(jnp.asarray(x))))
+    np.testing.assert_allclose(back, x, atol=2e-4)
+    img = rng.standard_normal((2, 32, 64)).astype(np.float32)
+    from repro.core import irfft2, rfft2
+    got2 = np.asarray(to_complex(rfft2(jnp.asarray(img))))
+    ref2 = np.fft.rfft2(img)
+    np.testing.assert_allclose(got2, ref2, atol=5e-4 * np.abs(ref2).max())
+    back2 = np.asarray(irfft2(rfft2(jnp.asarray(img))))
+    np.testing.assert_allclose(back2, img, atol=2e-4)
 
 
 def test_tuned_2d_plan_executes():

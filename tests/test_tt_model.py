@@ -1,0 +1,281 @@
+"""repro.tt: arch tables, Tensix pipeline, NoC model, plan traces, and the
+paper's §6 Wormhole-vs-Xeon table."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import FFTPlan, _time_candidates
+from repro.core.complexmath import SplitComplex
+from repro.tt import arch as ttarch
+from repro.tt import noc as ttnoc
+from repro.tt import report as ttreport
+from repro.tt import tensix as tt
+from repro.tt import trace as tttrace
+
+MIB = 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# arch
+# ---------------------------------------------------------------------------
+
+def test_arch_lookup_and_aliases():
+    assert ttarch.get_arch("wormhole").name == "wormhole_n300"
+    assert ttarch.get_arch("n300") is ttarch.get_arch("wormhole_n300")
+    assert ttarch.get_arch("xeon").kind == "cpu"
+    assert ttarch.get_arch(ttarch.TPU_V5E) is ttarch.TPU_V5E
+    with pytest.raises(KeyError, match="unknown arch"):
+        ttarch.get_arch("a100")
+
+
+def test_hw_table_matches_legacy_roofline_dict():
+    """The roofline's HW dict must keep its historical v5e numbers now that
+    it delegates here."""
+    from repro.analysis.roofline import HW
+    assert HW == ttarch.hw_table("tpu_v5e")
+    assert HW["peak_flops_bf16"] == 197e12
+    assert HW["hbm_bw"] == 819e9
+    assert HW["ici_bw"] == 50e9
+    assert HW["chip_power_w"] == 215.0
+
+
+def test_register_custom_arch():
+    custom = dataclasses.replace(ttarch.WORMHOLE_N300, name="wormhole_n150",
+                                 cores=64, dram_bw=288e9)
+    try:
+        ttarch.register_arch(custom, "n150")
+        assert ttarch.get_arch("n150").cores == 64
+        t = tttrace.trace_plan(
+            FFTPlan(shape=(256, 256), algo="fused", backend="pallas",
+                    block_batch=1), arch="n150")
+        # half the DRAM bandwidth of the n300 -> strictly slower prediction
+        t300 = tttrace.trace_plan(
+            FFTPlan(shape=(256, 256), algo="fused", backend="pallas",
+                    block_batch=1), arch="wormhole_n300")
+        assert t.seconds > t300.seconds
+    finally:
+        ttarch.ARCHS.pop("wormhole_n150", None)
+        ttarch._ALIASES.pop("n150", None)
+
+
+# ---------------------------------------------------------------------------
+# tensix pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_double_buffering_timeline():
+    per_tile = {"reader": 1e-6, "unpacker": 2e-6, "math": 1e-6,
+                "packer": 2e-6, "writer": 1e-6}
+    tl = tt.pipeline_timeline(per_tile, 100)
+    # fill = one traversal, then one tile per slowest-unit interval
+    assert tl.fill_s == pytest.approx(7e-6)
+    assert tl.steady_tile_s == pytest.approx(2e-6)
+    assert tl.total_s == pytest.approx(7e-6 + 99 * 2e-6)
+    assert tl.bottleneck == "unpacker" and tl.movement_bound
+    # the bottleneck unit is ~saturated, others idle part-time
+    assert tl.occupancy["unpacker"] == pytest.approx(1.0, abs=0.05)
+    assert tl.occupancy["math"] < 0.6
+
+
+def test_pipeline_without_double_buffering_serialises():
+    per_tile = {"reader": 1e-6, "unpacker": 2e-6, "math": 1e-6,
+                "packer": 2e-6, "writer": 1e-6}
+    serial = tt.pipeline_timeline(per_tile, 100, cb_depth=1)
+    overlapped = tt.pipeline_timeline(per_tile, 100, cb_depth=2)
+    assert serial.total_s == pytest.approx(100 * 7e-6)
+    assert overlapped.total_s < serial.total_s / 3
+
+
+def test_fft_kernel_on_tensix_is_movement_bound():
+    """The paper's core observation: the FFT's Tensix pipeline is limited
+    by data movement (unpack/pack), not by the math unit."""
+    a = ttarch.get_arch("wormhole_n300")
+    plane = 1024 * 1024 * 8.0
+    tl = tt.kernel_timeline(flops=5 * 1024 * 1024 * 20, dram_in=plane,
+                            dram_out=plane, sram_read=11 * plane,
+                            sram_write=11 * plane, arch=a)
+    assert tl.movement_bound
+
+
+# ---------------------------------------------------------------------------
+# noc
+# ---------------------------------------------------------------------------
+
+def test_global_transpose_crosses_most_of_the_plane():
+    x = ttnoc.global_transpose(1024, 1024, arch="wormhole_n300")
+    plane = 1024 * 1024 * 8
+    p = ttarch.get_arch("wormhole_n300").cores
+    assert x["noc_bytes"] == pytest.approx(plane * (p - 1) / p)
+    assert x["tiles"] == (1024 // 32) ** 2
+    small = ttnoc.global_transpose(256, 256, arch="wormhole_n300")
+    assert small["seconds"] < x["seconds"]
+
+
+def test_all_to_all_prices_compressed_wire_format():
+    tree = {"g": np.zeros((1024, 1024), np.float32)}
+    full = ttnoc.all_to_all_s(tree, 8, "wormhole_n300")
+    bf16 = ttnoc.all_to_all_s(tree, 8, "wormhole_n300", method="bf16")
+    int8 = ttnoc.all_to_all_s(tree, 8, "wormhole_n300", method="int8")
+    assert bf16["wire_bytes"] == pytest.approx(full["wire_bytes"] / 2)
+    assert int8["wire_bytes"] == pytest.approx(full["wire_bytes"] / 4)
+    assert full["wire_bytes"] == pytest.approx(4 * 1024 * 1024 * 7 / 8)
+    assert int8["seconds"] < bf16["seconds"] < full["seconds"]
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+def _fused(size, bb=1):
+    return FFTPlan(shape=(size, size), algo="fused", backend="pallas",
+                   block_batch=bb)
+
+
+def _row_col(size):
+    return FFTPlan(shape=(size, size), algo="row_col", backend="pallas",
+                   block_batch=8)
+
+
+def test_trace_stage_structure_fused_vs_transpose():
+    """Fusion collapses the stage list to one kernel; the transpose path
+    keeps four stages and 4x the DRAM traffic (the roofline's 8-vs-2
+    plane-traversal model)."""
+    from repro.analysis.roofline import fft2d_traffic_bytes
+    f = tttrace.trace_plan(_fused(512), arch="wormhole_n300")
+    r = tttrace.trace_plan(_row_col(512), arch="wormhole_n300")
+    assert len(f.stages) == 1 and f.stages[0].name == "fused_fft2d"
+    assert [s.name for s in r.stages] == [
+        "row_fft", "global_transpose", "col_fft", "output_transpose"]
+    plane = 512 * 512 * 8
+    assert f.dram_bytes == pytest.approx(
+        fft2d_traffic_bytes(512, 512, fused=True), rel=0.05)
+    assert r.dram_bytes == pytest.approx(
+        fft2d_traffic_bytes(512, 512, fused=False), rel=0.05)
+    assert f.stages[0].noc_bytes == 0
+    assert r.stages[1].noc_bytes > 0.9 * plane   # the §5 NoC all-to-all
+    assert f.energy_j > 0 and r.energy_j > f.energy_j
+
+
+@pytest.mark.parametrize("size", [256, 512])
+@pytest.mark.parametrize("arch", ["wormhole_n300", "tpu_v5e"])
+def test_predicted_ordering_fused_beats_transpose(size, arch):
+    cands = [_fused(size), _row_col(size)]
+    costs = [tttrace.predict_cost(p, arch=arch) for p in cands]
+    assert costs[0] < costs[1]
+
+
+@pytest.mark.parametrize("size,batch", [(256, 4), (512, 1)])
+def test_ranking_consistency_predicted_vs_measured(size, batch):
+    """The model is useful iff its ordering of real candidate plans matches
+    what the measuring autotuner finds: fused-vs-transpose at 256^2/512^2.
+    The 256^2 case measures a batch of 4 — one image is only tens of ms in
+    interpret mode, inside this shared box's noise floor."""
+    cands = [_fused(size), _row_col(size)]
+    rng = np.random.default_rng(0)
+    shp = (batch, size, size)
+    x = SplitComplex(jnp.asarray(rng.standard_normal(shp), jnp.float32),
+                     jnp.asarray(rng.standard_normal(shp), jnp.float32))
+    measured = _time_candidates(cands, x, iters=3)
+    measured_order = np.argsort(measured).tolist()
+    for arch in ("wormhole_n300", "tpu_v5e"):
+        predicted = [tttrace.predict_cost(p, arch=arch, batch=batch)
+                     for p in cands]
+        assert np.argsort(predicted).tolist() == measured_order, \
+            (arch, predicted, measured)
+
+
+def test_vmem_high_water_regression_1024_fused():
+    """Pin the fused kernel's 1024x1024 VMEM footprint (ROADMAP): the tile
+    is 8 MiB of split-complex f32, the Stockham ping-pong doubles it, and
+    the packed twiddle tables add 2 x 30 KiB — just over the 16 MiB v5e
+    VMEM budget, so the model must flag it instead of assuming it fits."""
+    t = tttrace.trace_plan(_fused(1024), arch="tpu_v5e")
+    tile = 1024 * 1024 * 8                  # re+im f32 plane
+    twiddles = 2 * (2 * 5 * 3 * (1024 // 4) * 4)
+    assert tile == 8 * MIB
+    assert t.sram_high_water == 2 * tile + twiddles == 16838656
+    assert t.sram_budget == 16 * MIB
+    assert not t.fits
+    assert tttrace.predict_cost(_fused(1024), arch="tpu_v5e") == float("inf")
+    # ...while 512x512 fits comfortably, and block_batch=4 (on a batch that
+    # actually sustains it — block_batch clamps to the batch) busts it again
+    assert tttrace.trace_plan(_fused(512), arch="tpu_v5e").fits
+    assert not tttrace.trace_plan(_fused(512, bb=4), arch="tpu_v5e",
+                                  batch=4).fits
+    # the Wormhole budget is per-core L1 aggregated over the mesh: fits
+    assert tttrace.trace_plan(_fused(1024), arch="wormhole_n300").fits
+
+
+def test_trace_1d_plans_and_energy_scaling():
+    small = tttrace.trace_plan(FFTPlan(shape=(4096,), algo="stockham"),
+                               arch="wormhole_n300", batch=8)
+    big = tttrace.trace_plan(FFTPlan(shape=(4096,), algo="stockham"),
+                             arch="wormhole_n300", batch=64)
+    assert big.seconds > small.seconds
+    assert big.energy_j > small.energy_j
+    assert big.dram_bytes == pytest.approx(8 * small.dram_bytes, rel=0.3)
+    r2 = tttrace.trace_plan(FFTPlan(shape=(4096,), algo="stockham", radix=2),
+                            arch="wormhole_n300", batch=8)
+    # radix-2 runs twice the stages -> more SRAM traffic than mixed 4/2
+    assert r2.stages[0].sram_bytes > small.stages[0].sram_bytes
+
+
+def test_trace_rfft_plans_price_the_real_schedule():
+    """rfft-kind plans must trace their actual schedule: inner half-length
+    pass + untangle in 1-D; half-width spectrum transpose + column pass in
+    2-D.  The half-spectrum saving shows up as fewer bytes than the c2c
+    plan of the same shape, not as a crash or a full-length mischarge."""
+    from repro.core import clear_plan_cache, get_plan
+    clear_plan_cache()
+    r1 = tttrace.trace_plan(get_plan((512,), kind="rfft"),
+                            arch="wormhole_n300", batch=4)
+    c1 = tttrace.trace_plan(get_plan((512,)), arch="wormhole_n300", batch=4)
+    assert [s.name for s in r1.stages] == ["rfft_inner_naive",
+                                           "rfft_untangle"]
+    # inner naive pass runs at n/2: far below the full-length charge
+    assert r1.stages[0].flops < 0.3 * 8.0 * 4 * 512 ** 2
+    assert r1.seconds > 0 and r1.energy_j > 0
+    # 2-D: forward and inverse both trace, with the half-width transpose
+    r2 = tttrace.trace_plan(get_plan((64, 128), kind="rfft"),
+                            arch="wormhole_n300")
+    assert [s.name for s in r2.stages] == [
+        "rfft_rows_naive", "rfft_untangle", "global_transpose", "col_fft"]
+    c2 = tttrace.trace_plan(
+        FFTPlan(shape=(64, 128), algo="row_col", backend="jnp",
+                block_batch=8), arch="wormhole_n300")
+    assert r2.noc_bytes < 0.6 * c2.noc_bytes      # halved transpose bytes
+    ri = tttrace.trace_plan(get_plan((64, 128), kind="rfft", inverse=True),
+                            arch="wormhole_n300")
+    assert ri.stages[0].name == "col_ifft"
+    assert ri.stages[-1].name == "irfft_extend"
+    assert tttrace.predict_cost(get_plan((64, 128), kind="rfft"),
+                                arch="tpu_v5e") < float("inf")
+    clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# report — the paper's §6 table
+# ---------------------------------------------------------------------------
+
+def test_paper_table_reproduces_power_and_energy_ratios():
+    """Acceptance: the Wormhole-vs-Xeon table shows ~8x less power and
+    ~2.8x less energy for the Wormhole while being slower (paper abstract
+    + §6), at every published size."""
+    rows = ttreport.compare("wormhole_n300", "xeon_8160", source="paper")
+    assert {r["size"] for r in rows} >= {256, 512, 1024}
+    for r in rows:
+        assert r["time_ratio"] > 1.0, "Wormhole is slower in the paper"
+        assert 7.0 < r["power_ratio"] < 9.0, r
+        assert 2.5 < r["energy_ratio"] < 3.1, r
+    md = ttreport.markdown_table(rows)
+    assert "wormhole_n300" in md and "xeon_8160" in md
+    assert "1024x1024" in md
+    import json
+    parsed = json.loads(ttreport.to_json(rows))
+    assert len(parsed["wormhole_vs_xeon"]) == len(rows)
+
+
+def test_model_mode_table_runs():
+    rows = ttreport.compare(source="model", sizes=(256,))
+    assert rows[0]["time_a_ms"] > 0 and rows[0]["energy_b_j"] > 0
