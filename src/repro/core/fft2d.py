@@ -113,14 +113,39 @@ def _rfft2_direct(x: jnp.ndarray, *, row_algo: str,
     return _swap(y, -1, -2)
 
 
-def irfft2(xf: SplitComplex, *, algo: str = "auto") -> jnp.ndarray:
+def irfft2(xf: SplitComplex, s=None, *, algo: str = "auto") -> jnp.ndarray:
+    """Inverse real 2-D FFT from the (..., H, W/2+1) half spectrum.
+
+    ``s=(h, w)`` follows ``numpy.fft.irfft2``: the spectrum is truncated or
+    trailing-zero-padded to h rows and w/2+1 bins, then transformed with an
+    output width of ``w`` (even, as everywhere in this repo).  The fit
+    happens before plan dispatch, so both algo paths — the registry's
+    rfft-kind (h, w) key and an explicit ``algo=`` — see the same spectrum.
+    """
+    if s is not None:
+        h, w = (int(d) for d in s)
+        assert w % 2 == 0, f"irfft2 requires an even output width, got {s}"
+        xf = _fit_spectrum2(xf, h, w)
+    h = xf.shape[-2]
+    w = 2 * (xf.shape[-1] - 1)
     if algo == "auto":
         from . import plan as _plan
-        h = xf.shape[-2]
-        w = 2 * (xf.shape[-1] - 1)
         return _plan.get_plan((h, w), dtype=xf.dtype, inverse=True,
                               kind="rfft")(xf)
     return _irfft2_direct(xf, row_algo=algo, col_algo=algo)
+
+
+def _fit_spectrum2(xf: SplitComplex, h: int, w: int) -> SplitComplex:
+    """Truncate / zero-pad a 2-D half spectrum to (h, w/2+1) — numpy's
+    ``ifft(a, n=h)`` trailing-fit on axis -2, then the 1-D half-spectrum
+    fit on the last axis."""
+    rows = xf.shape[-2]
+    if rows > h:
+        xf = SplitComplex(xf.re[..., :h, :], xf.im[..., :h, :])
+    elif rows < h:
+        pad = [(0, 0)] * (xf.re.ndim - 2) + [(0, h - rows), (0, 0)]
+        xf = SplitComplex(jnp.pad(xf.re, pad), jnp.pad(xf.im, pad))
+    return fft1d._fit_half_spectrum(xf, w)
 
 
 def _irfft2_direct(xf: SplitComplex, *, row_algo: str,

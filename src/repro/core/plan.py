@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import time
 from typing import Dict, Optional, Tuple
 
@@ -353,6 +354,32 @@ def load_wisdom(path: str, *, strict: bool = False) -> int:
             block_batch=block_batch, tuned=True, tune_report=report)
         loaded += 1
     return loaded
+
+
+WISDOM_ENV = "REPRO_FFT_WISDOM"
+
+
+def _autoload_wisdom() -> int:
+    """Load wisdom from ``$REPRO_FFT_WISDOM`` at import, FFTW style.
+
+    Best-effort by design: an unset/empty variable is a no-op and a
+    missing or corrupt file must never break ``import repro`` — bad
+    entries are already skipped non-strictly by :func:`load_wisdom`.
+    Returns the number of entries installed (kept in
+    ``WISDOM_AUTOLOADED`` for introspection).
+    """
+    path = os.environ.get(WISDOM_ENV, "").strip()
+    if not path:
+        return 0
+    try:
+        return load_wisdom(path)
+    except (OSError, ValueError, TypeError, AttributeError, KeyError,
+            json.JSONDecodeError):
+        # unreadable, not JSON, or JSON of the wrong shape entirely
+        return 0
+
+
+WISDOM_AUTOLOADED = _autoload_wisdom()
 
 
 # ---------------------------------------------------------------------------

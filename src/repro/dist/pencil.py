@@ -27,6 +27,23 @@ distributed FFT library is built on).  Four transforms live here:
                               (h, w) layout (flattened, row-sharded); the
                               matching ``inverse=True`` consumes exactly that
                               layout, so roundtrips are exact.
+- :func:`prfft2` / :func:`pirfft2`  Real-input 2-D pencil FFT: the row pass
+                              is an rfft (half the FLOPs), and the
+                              all_to_all ships only the Hermitian-unique
+                              half spectrum — the Nyquist column rides in
+                              the DC column's imaginary plane (both are
+                              real for real input), so exactly W/2 complex
+                              pencils cross the wire: **half** of
+                              :func:`pfft2`'s exchange bytes, the ROADMAP's
+                              "halve the all_to_all bytes" follow-on.
+
+Every all_to_all optionally passes through the compressed wire formats of
+:mod:`repro.dist.compression` (``compress="bf16"``/``"int8"``), and records
+its per-device payload bytes — as priced by
+:func:`repro.dist.compression.wire_bytes` — in a module-level wire log
+(:func:`reset_wire_log` / :func:`wire_log` / :func:`logged_exchange_bytes`)
+so tests and benchmarks can pin *measured* exchange traffic against the
+:func:`repro.tt.trace.trace_dist` prediction.
 
 All local 1-D passes route through the plan registry
 (:mod:`repro.core.plan`) via ``algo="auto"``, so the fused/Stockham kernels
@@ -38,14 +55,54 @@ constraint).
 """
 from __future__ import annotations
 
+import collections
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.complexmath import SplitComplex
+from repro.core import fft1d
 from repro.core import plan as plan_lib
 
 from ._compat import all_to_all, shard_map_unchecked
+from .compression import all_to_all_compressed, wire_bytes
+
+
+# ---------------------------------------------------------------------------
+# Wire log: measured exchange traffic
+# ---------------------------------------------------------------------------
+# Every _a2a records the per-device payload it ships (as priced by
+# compression.wire_bytes for its wire format) at trace time — payload shapes
+# are static, so tracers log exactly what a real wire counter would.  The
+# byte total is a plain running counter; per-entry records are kept in a
+# bounded deque so a long-running loop that never resets cannot leak.
+
+_WIRE_LOG = collections.deque(maxlen=1024)
+_WIRE_TOTAL = 0
+
+
+def reset_wire_log() -> None:
+    global _WIRE_TOTAL
+    _WIRE_TOTAL = 0
+    _WIRE_LOG.clear()
+
+
+def wire_log() -> list:
+    """Recent entries ``{"tag", "method", "bytes"}``, one per all_to_all
+    traced (most recent 1024)."""
+    return list(_WIRE_LOG)
+
+
+def logged_exchange_bytes() -> int:
+    """Total per-device payload bytes shipped since the last reset."""
+    return _WIRE_TOTAL
+
+
+def _log_wire(tag: str, method: str, nbytes: int) -> None:
+    global _WIRE_TOTAL
+    _WIRE_TOTAL += nbytes
+    _WIRE_LOG.append({"tag": tag, "method": method, "bytes": nbytes})
 
 
 # ---------------------------------------------------------------------------
@@ -68,10 +125,18 @@ def _fft_axis(x: SplitComplex, axis: int, *, inverse: bool,
                         jnp.moveaxis(y.im, -1, axis))
 
 
-def _a2a(x: SplitComplex, axis_name: str, split_axis: int,
-         concat_axis: int) -> SplitComplex:
-    return SplitComplex(all_to_all(x.re, axis_name, split_axis, concat_axis),
-                        all_to_all(x.im, axis_name, split_axis, concat_axis))
+def _a2a(x: SplitComplex, axis_name: str, split_axis: int, concat_axis: int,
+         *, method: str = "none", tag: str = "a2a") -> SplitComplex:
+    _log_wire(tag, method, wire_bytes((x.re, x.im), method))
+    if method == "none":
+        return SplitComplex(
+            all_to_all(x.re, axis_name, split_axis, concat_axis),
+            all_to_all(x.im, axis_name, split_axis, concat_axis))
+    return SplitComplex(
+        all_to_all_compressed(x.re, axis_name, split_axis, concat_axis,
+                              method),
+        all_to_all_compressed(x.im, axis_name, split_axis, concat_axis,
+                              method))
 
 
 def _swap_last2(x: SplitComplex) -> SplitComplex:
@@ -85,7 +150,7 @@ def _swap_last2(x: SplitComplex) -> SplitComplex:
 
 def pfft2(x: SplitComplex, mesh, axis: str = "data", *, chunks: int = 1,
           transposed_output: bool = True, inverse: bool = False,
-          backend: str = "jnp") -> SplitComplex:
+          compress: str = "none", backend: str = "jnp") -> SplitComplex:
     """2-D FFT of a (H, W) array whose rows are sharded over ``axis``.
 
     Schedule per device (p = mesh size along ``axis``):
@@ -102,6 +167,8 @@ def pfft2(x: SplitComplex, mesh, axis: str = "data", *, chunks: int = 1,
     the paper's fused kernel leaves the transpose implicit.  With
     ``transposed_output=False`` a second all_to_all restores natural (H, W)
     row-sharded order, so ``pfft2(pfft2(x), inverse=True)`` roundtrips.
+    ``compress`` routes the exchanges through the
+    :mod:`repro.dist.compression` wire formats.
     """
     h, w = x.shape[-2], x.shape[-1]
     p = mesh.shape[axis]
@@ -116,7 +183,8 @@ def pfft2(x: SplitComplex, mesh, axis: str = "data", *, chunks: int = 1,
             sl = slice(c * rc, (c + 1) * rc)
             y = _fft_last(SplitComplex(re[sl], im[sl]),
                           inverse=inverse, backend=backend)
-            pieces.append(_a2a(y, axis, 1, 0))   # (p*rc, W/p), peer-major
+            pieces.append(_a2a(y, axis, 1, 0, method=compress,
+                               tag="pfft2/a2a"))  # (p*rc, W/p), peer-major
         if chunks == 1:
             z = pieces[0]
         else:
@@ -128,13 +196,208 @@ def pfft2(x: SplitComplex, mesh, axis: str = "data", *, chunks: int = 1,
         z = _fft_axis(z, 0, inverse=inverse, backend=backend)  # (H, W/p)
         if transposed_output:
             return _swap_last2(z)                # (W/p, H): local only
-        return _a2a(z, axis, 0, 1)               # (H/p, W): natural order
+        return _a2a(z, axis, 0, 1, method=compress,
+                    tag="pfft2/a2a_out")         # (H/p, W): natural order
 
     out_spec = P(axis, None)
     fn = shard_map_unchecked(body, mesh=mesh,
                    in_specs=(P(axis, None), P(axis, None)),
                    out_specs=SplitComplex(out_spec, out_spec))
     return fn(x.re, x.im)
+
+
+# ---------------------------------------------------------------------------
+# Real-input 2-D pencil FFT (the halved-exchange schedule)
+# ---------------------------------------------------------------------------
+# Layout of the exchanged/returned half spectrum ("packed"): an rfft row has
+# W/2+1 bins, but bins 0 (DC) and W/2 (Nyquist) are exactly real, so the
+# Nyquist bin is carried in the DC bin's imaginary slot.  W real samples
+# become exactly W/2 complex values per row — information-tight — and the
+# pencil exchange ships W/2 columns instead of pfft2's W.  After the column
+# FFTs the packed column 0 holds FFT(dc_col) + i*FFT(nyq_col); because
+# dc_col/nyq_col are real, :func:`unpack_half_spectrum` recovers both with
+# the standard Hermitian untangle (a local O(H) post-pass, no extra wire).
+
+
+def _pack_rows(y: SplitComplex) -> SplitComplex:
+    """(..., W/2+1) row half-spectra -> (..., W/2) packed (Nyquist into the
+    DC imaginary plane; both bins are exactly real for real input)."""
+    hw = y.shape[-1] - 1
+    return SplitComplex(
+        y.re[..., :hw],
+        jnp.concatenate([y.re[..., hw:], y.im[..., 1:hw]], axis=-1))
+
+
+def _unpack_rows(z: SplitComplex) -> SplitComplex:
+    """Inverse of :func:`_pack_rows`: (..., W/2) packed -> (..., W/2+1)."""
+    zero = jnp.zeros_like(z.re[..., :1])
+    return SplitComplex(
+        jnp.concatenate([z.re[..., :1], z.re[..., 1:], z.im[..., :1]], -1),
+        jnp.concatenate([zero, z.im[..., 1:], zero], -1))
+
+
+def _split_packed_col(z: SplitComplex):
+    """Hermitian-untangle one packed column Z = A + i*B (A, B the FFTs of
+    two real length-H sequences) into (A, B).  Acts on the last axis."""
+    h = z.shape[-1]
+    idx = (-jnp.arange(h)) % h
+    cr = jnp.take(z.re, idx, axis=-1)          # conj(Z[-k]): re
+    ci = -jnp.take(z.im, idx, axis=-1)         # conj(Z[-k]): im
+    a = SplitComplex((z.re + cr) * 0.5, (z.im + ci) * 0.5)
+    b = SplitComplex((z.im - ci) * 0.5, (cr - z.re) * 0.5)
+    return a, b
+
+
+def unpack_half_spectrum(spec_t: SplitComplex) -> SplitComplex:
+    """Expand :func:`prfft2`'s packed transposed output (..., W/2, H) into
+    the standard transposed half spectrum (..., W/2+1, H) —
+    ``numpy.fft.rfft2(x).T`` — by untangling the packed column 0 into the
+    DC and Nyquist columns.  Pure jnp; run it on the gathered result (or
+    any full-H shard)."""
+    dc, nyq = _split_packed_col(
+        SplitComplex(spec_t.re[..., 0, :], spec_t.im[..., 0, :]))
+    cat = lambda r0, body, rn: jnp.concatenate(
+        [r0[..., None, :], body, rn[..., None, :]], axis=-2)
+    return SplitComplex(cat(dc.re, spec_t.re[..., 1:, :], nyq.re),
+                        cat(dc.im, spec_t.im[..., 1:, :], nyq.im))
+
+
+def pack_half_spectrum(spec_t: SplitComplex) -> SplitComplex:
+    """Inverse of :func:`unpack_half_spectrum`: fold a standard transposed
+    half spectrum (..., W/2+1, H) into the packed (..., W/2, H) layout
+    :func:`pirfft2` consumes (row 0 := DC + i*Nyquist)."""
+    dc = SplitComplex(spec_t.re[..., 0, :], spec_t.im[..., 0, :])
+    ny = SplitComplex(spec_t.re[..., -1, :], spec_t.im[..., -1, :])
+    row0_re = dc.re - ny.im
+    row0_im = dc.im + ny.re
+    return SplitComplex(
+        jnp.concatenate([row0_re[..., None, :], spec_t.re[..., 1:-1, :]], -2),
+        jnp.concatenate([row0_im[..., None, :], spec_t.im[..., 1:-1, :]], -2))
+
+
+def _fit_last(x: SplitComplex, n: int) -> SplitComplex:
+    """Truncate / zero-pad the last axis to ``n`` (numpy ``fft(a, n=...)``
+    semantics: crop or append trailing zeros)."""
+    cur = x.shape[-1]
+    if cur == n:
+        return x
+    if cur > n:
+        return SplitComplex(x.re[..., :n], x.im[..., :n])
+    pad = [(0, 0)] * (x.re.ndim - 1) + [(0, n - cur)]
+    return SplitComplex(jnp.pad(x.re, pad), jnp.pad(x.im, pad))
+
+
+def prfft2(x: jnp.ndarray, mesh, axis: str = "data", *,
+           transposed_output: bool = True, compress: str = "none",
+           backend: str = "jnp") -> SplitComplex:
+    """Real-input 2-D pencil FFT of a real (H, W) array row-sharded over
+    ``axis``: the distributed :func:`repro.core.fft2d.rfft2`.
+
+    Schedule per device (p = mesh size along ``axis``):
+
+    1. local row rfft via the plan registry's ``kind="rfft"`` entries
+       ((H/p, W) real -> (H/p, W/2+1) half spectra, half the row FLOPs);
+    2. pack: Nyquist bin into the DC bin's imaginary plane -> (H/p, W/2);
+    3. all_to_all of the W/2 packed pencils — **half** of :func:`pfft2`'s
+       exchange bytes — to (H, W/(2p));
+    4. local column FFTs on the full-height packed pencils.
+
+    Output (default) is the packed transposed half spectrum (W/2, H)
+    sharded over ``axis``; :func:`unpack_half_spectrum` expands it to the
+    standard (W/2+1, H) = ``rfft2(x).T``.  ``transposed_output=False``
+    spends a second (still packed, still halved) all_to_all to return the
+    natural row-sharded (H/p, W/2) layout instead.
+    """
+    h, w = x.shape[-2], x.shape[-1]
+    p = mesh.shape[axis]
+    assert w % 2 == 0, f"prfft2 needs an even width, got {x.shape}"
+    assert h % p == 0 and (w // 2) % p == 0, (x.shape, p)
+
+    def body(xr):
+        pl = plan_lib.get_plan((w,), dtype=xr.dtype, kind="rfft",
+                               backend=backend)
+        y = _pack_rows(pl(xr))                   # (H/p, W/2) packed
+        z = _a2a(y, axis, 1, 0, method=compress,
+                 tag="prfft2/a2a")               # (H, W/(2p))
+        z = _fft_axis(z, 0, inverse=False, backend=backend)
+        if transposed_output:
+            return _swap_last2(z)                # (W/(2p), H)
+        return _a2a(z, axis, 0, 1, method=compress,
+                    tag="prfft2/a2a_out")        # (H/p, W/2) natural
+
+    out_spec = P(axis, None)
+    fn = shard_map_unchecked(body, mesh=mesh, in_specs=(P(axis, None),),
+                             out_specs=SplitComplex(out_spec, out_spec))
+    return fn(x)
+
+
+def pirfft2(xf: SplitComplex, mesh, axis: str = "data", *, s=None,
+            compress: str = "none", backend: str = "jnp") -> jnp.ndarray:
+    """Inverse of :func:`prfft2`: packed transposed half spectrum (W/2, H)
+    sharded over ``axis`` -> real (H, W) row-sharded.
+
+    ``s=(h, w)`` follows ``numpy.fft.irfft2`` truncate/pad semantics.  Both
+    fits are *local*: the H fit happens on the full-height pencils before
+    the inverse column FFTs, and the W fit on the complete row half-spectra
+    after the exchange — so explicit shapes never cost extra wire.
+    """
+    hw, h_in = xf.shape[-2], xf.shape[-1]
+    w_full = 2 * hw
+    p = mesh.shape[axis]
+    h_out, w_out = (int(s[0]), int(s[1])) if s is not None else (h_in, w_full)
+    assert w_out % 2 == 0 and w_out >= 2, \
+        f"pirfft2 needs an even output width, got s={s}"
+    assert hw % p == 0 and h_out % p == 0, (xf.shape, s, p)
+
+    def body(re, im):
+        zin = SplitComplex(re, im)                   # (W/(2p), h_in)
+        z = _fit_last(zin, h_out)                    # numpy ifft n= fit
+        z = _fft_last(z, inverse=True, backend=backend)  # (W/(2p), h_out)
+        if h_out != h_in:
+            # the H fit breaks the packed column's Hermitian symmetry (a
+            # cropped/padded DC column no longer inverse-transforms to a
+            # real signal), so the packed column is untangled at full
+            # height, fitted and transformed as two real columns, and
+            # spliced back on the device that owns global column 0
+            dc, ny = _split_packed_col(
+                SplitComplex(zin.re[0], zin.im[0]))
+            a = _fft_last(_fit_last(dc, h_out), inverse=True,
+                          backend=backend)
+            b = _fft_last(_fit_last(ny, h_out), inverse=True,
+                          backend=backend)
+            own0 = jax.lax.axis_index(axis) == 0
+            z = SplitComplex(
+                z.re.at[0].set(jnp.where(own0, a.re, z.re[0])),
+                z.im.at[0].set(jnp.where(own0, b.re, z.im[0])))
+        z = _a2a(z, axis, 1, 0, method=compress,
+                 tag="pirfft2/a2a")                  # (W/2, h_out/p)
+        z = _swap_last2(z)                           # (h_out/p, W/2) packed
+        half = fft1d._fit_half_spectrum(_unpack_rows(z), w_out)
+        pl = plan_lib.get_plan((w_out,), dtype=z.dtype, kind="rfft",
+                               inverse=True, backend=backend)
+        return pl(half)                              # real (h_out/p, w_out)
+
+    fn = shard_map_unchecked(body, mesh=mesh,
+                             in_specs=(P(axis, None), P(axis, None)),
+                             out_specs=P(axis, None))
+    return fn(xf.re, xf.im)
+
+
+def exchange_bytes(h: int, w: int, devices: int, *, real: bool = False,
+                   method: str = "none", dtype=jnp.float32,
+                   transposed_output: bool = True) -> int:
+    """Per-device all_to_all *payload* bytes of one :func:`pfft2` /
+    :func:`prfft2` call — exactly what the wire log records.
+    :func:`repro.tt.trace.trace_dist` prices the (devices-1)/devices
+    fraction of this that actually leaves the chip.  ``real=True`` halves
+    the column count (the packed half spectrum); the per-element wire
+    width derives from :func:`repro.dist.compression.wire_bytes` on a
+    probe leaf so the two pricings can never drift."""
+    import numpy as np
+    cols = w // 2 if real else w
+    legs = 1 if transposed_output else 2
+    per_elem = wire_bytes(np.zeros((1,), jnp.dtype(dtype)), method)
+    return legs * 2 * (h // devices) * cols * per_elem
 
 
 # ---------------------------------------------------------------------------

@@ -29,13 +29,15 @@ mode ranks candidates with :func:`repro.tt.trace.predict_cost` before
 measuring only the top-k.
 """
 from . import arch, noc, report, tensix, trace
-from .arch import Arch, ARCHS, get_arch, register_arch, hw_table
+from .arch import Arch, ARCHS, chip_grid, get_arch, register_arch, hw_table
 from .tensix import PipelineTimeline, pipeline_timeline
-from .trace import PlanTrace, TraceStage, trace_plan, predict_cost
+from .trace import (DistTrace, PlanTrace, TraceStage, plan_elem_bytes,
+                    predict_cost, trace_dist, trace_plan)
 
 __all__ = [
     "arch", "noc", "report", "tensix", "trace",
-    "Arch", "ARCHS", "get_arch", "register_arch", "hw_table",
+    "Arch", "ARCHS", "chip_grid", "get_arch", "register_arch", "hw_table",
     "PipelineTimeline", "pipeline_timeline",
-    "PlanTrace", "TraceStage", "trace_plan", "predict_cost",
+    "DistTrace", "PlanTrace", "TraceStage", "plan_elem_bytes",
+    "trace_plan", "trace_dist", "predict_cost",
 ]

@@ -54,6 +54,17 @@ class Arch:
     energy_per_noc_byte_j: float
     energy_per_sram_byte_j: float
     noc_grid: Tuple[int, int] = (1, 1)   # physical core grid the NoC routes over
+    # -- multi-chip interconnect (the dist.pencil exchange fabric) ----------
+    # Wormhole chips talk over 100 Gb/s ethernet links (16 per chip on the
+    # n300 generation); TPUs over ICI; CPUs over UPI.  ``eth_bw`` is the
+    # per-link rate, ``eth_links`` how many a collective can stripe across,
+    # ``eth_latency_s`` the per-hop cost on the chip grid
+    # (:func:`chip_grid` / :data:`MULTICHIP_GRIDS`).  Zero falls back to
+    # the single-link ``link_bw`` / ``noc_latency_s`` numbers.
+    eth_bw: float = 0.0                  # per ethernet/ICI link bytes/s
+    eth_links: int = 1                   # parallel links per chip
+    eth_latency_s: float = 0.0           # per chip-to-chip hop
+    energy_per_link_byte_j: float = 0.0  # serdes energy; 0 -> NoC coefficient
     published: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -91,6 +102,8 @@ WORMHOLE_N300 = Arch(
     energy_per_flop_j=1.2e-12, energy_per_dram_byte_j=15e-12,
     energy_per_noc_byte_j=1.5e-12, energy_per_sram_byte_j=0.4e-12,
     noc_grid=(8, 16),
+    eth_bw=12.5e9, eth_links=16, eth_latency_s=1.0e-6,
+    energy_per_link_byte_j=30e-12,
     published={
         "workload": "fft2d_f32",
         "source": "paper §6 (Wormhole n300 measured)",
@@ -111,6 +124,8 @@ GRAYSKULL_E150 = Arch(
     energy_per_flop_j=1.6e-12, energy_per_dram_byte_j=22e-12,
     energy_per_noc_byte_j=1.8e-12, energy_per_sram_byte_j=0.5e-12,
     noc_grid=(10, 12),
+    eth_bw=16e9, eth_links=1, eth_latency_s=2.0e-6,   # PCIe only, no eth mesh
+    energy_per_link_byte_j=35e-12,
 )
 
 # TPU v5e: the numbers repro.analysis.roofline previously hardcoded —
@@ -126,6 +141,8 @@ TPU_V5E = Arch(
     launch_overhead_s=3e-6, noc_latency_s=1e-9,
     energy_per_flop_j=0.45e-12, energy_per_dram_byte_j=7e-12,
     energy_per_noc_byte_j=2e-12, energy_per_sram_byte_j=0.15e-12,
+    eth_bw=50e9, eth_links=4, eth_latency_s=1.0e-6,   # ICI 2-D torus
+    energy_per_link_byte_j=10e-12,
 )
 
 # Xeon Platinum 8160: the paper's CPU baseline — 24 cores @ 2.1 GHz base,
@@ -141,6 +158,8 @@ XEON_8160 = Arch(
     energy_per_flop_j=20e-12, energy_per_dram_byte_j=25e-12,
     energy_per_noc_byte_j=4e-12, energy_per_sram_byte_j=1.5e-12,
     noc_grid=(4, 6),
+    eth_bw=20.8e9, eth_links=3, eth_latency_s=0.5e-6,  # UPI
+    energy_per_link_byte_j=20e-12,
     published={
         "workload": "fft2d_f32",
         "source": "paper §6 (24-core Xeon Platinum, FFTW)",
@@ -179,6 +198,33 @@ def register_arch(arch: Arch, *aliases: str) -> Arch:
     for a in aliases:
         _ALIASES[a.lower()] = arch.name
     return arch
+
+
+# ---------------------------------------------------------------------------
+# Multi-chip hop table
+# ---------------------------------------------------------------------------
+# How `devices` chips are wired for the dist.pencil exchanges: the canonical
+# near-square meshes (an n300 board is 2 chips; a TT "nebula" rack 2x4; a
+# galaxy 4x8; TPU ICI slices are 2-D tori).  :func:`chip_grid` answers for
+# any count, falling back to the most-square factorisation, and
+# :func:`repro.tt.noc.eth_hops` turns the grid into a mean hop count.
+
+MULTICHIP_GRIDS: Dict[int, Tuple[int, int]] = {
+    1: (1, 1), 2: (1, 2), 4: (2, 2), 8: (2, 4),
+    16: (4, 4), 32: (4, 8), 64: (8, 8),
+}
+
+
+def chip_grid(devices: int) -> Tuple[int, int]:
+    """The (rows, cols) chip mesh `devices` chips are arranged in."""
+    devices = int(devices)
+    assert devices >= 1, devices
+    if devices in MULTICHIP_GRIDS:
+        return MULTICHIP_GRIDS[devices]
+    r = int(devices ** 0.5)
+    while devices % r:
+        r -= 1
+    return (r, devices // r)
 
 
 def hw_table(name="tpu_v5e") -> dict:

@@ -19,7 +19,7 @@ from __future__ import annotations
 import math
 from typing import Optional, Tuple
 
-from .arch import get_arch
+from .arch import chip_grid, get_arch
 from .tensix import TILE_DIM, TILE_ELEMS
 
 
@@ -74,8 +74,16 @@ def global_transpose(h: int, w: int, *, arch, elem_bytes: int = 8) -> dict:
     }
 
 
+def eth_hops(devices: int, grid: Optional[Tuple[int, int]] = None) -> float:
+    """Mean chip-to-chip hop count of one all_to_all over ``devices`` chips
+    laid out on the :func:`repro.tt.arch.chip_grid` mesh (or an explicit
+    ``grid``).  Same Manhattan-torus math as the on-chip NoC, one level up."""
+    return mean_hops(grid if grid is not None else chip_grid(devices))
+
+
 def all_to_all_s(tree_or_bytes, devices: int, arch, *,
-                 method: str = "none") -> dict:
+                 method: str = "none", multichip: bool = False,
+                 grid: Optional[Tuple[int, int]] = None) -> dict:
     """One all_to_all over ``devices`` chips (the pencil-FFT exchange).
 
     ``tree_or_bytes`` is either a pytree (priced per device through
@@ -83,6 +91,13 @@ def all_to_all_s(tree_or_bytes, devices: int, arch, *,
     wire format) or a plain per-device byte count.  Each device keeps its
     diagonal block, so (devices-1)/devices of the payload crosses the
     off-chip links.
+
+    With ``multichip=True`` the exchange is priced on the arch's ethernet/
+    ICI fabric instead of a single generic link: the per-device traffic
+    stripes across ``eth_links`` links of ``eth_bw`` each, and per-hop
+    latency comes from the :func:`eth_hops` chip-grid hop table — this is
+    what :func:`repro.tt.trace.trace_dist` charges the dist.pencil
+    exchange legs with.
     """
     import numpy as np
     from repro.dist.compression import wire_bytes
@@ -96,6 +111,17 @@ def all_to_all_s(tree_or_bytes, devices: int, arch, *,
     else:
         per_device = float(wire_bytes(tree_or_bytes, method))
     wire = per_device * max(0, devices - 1) / max(1, devices)
+    if multichip:
+        bw = (a.eth_bw or a.link_bw) * max(1, a.eth_links)
+        lat = a.eth_latency_s or a.noc_latency_s
+        hops = eth_hops(devices, grid)
+        return {
+            "wire_bytes": wire,
+            "seconds": wire / bw + hops * lat,
+            "method": method,
+            "hops": hops,
+            "grid": grid if grid is not None else chip_grid(devices),
+        }
     return {
         "wire_bytes": wire,
         "seconds": wire / a.link_bw + a.noc_latency_s * max(0, devices - 1),

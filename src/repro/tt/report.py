@@ -129,6 +129,51 @@ def to_json(rows: List[dict], *, indent: int = 2) -> str:
                       sort_keys=True)
 
 
+# ---------------------------------------------------------------------------
+# Distributed pencil schedules (the halved-exchange table)
+# ---------------------------------------------------------------------------
+
+def dist_compare(sizes: Sequence[int] = (512, 1024), *, devices: int = 8,
+                 arch="wormhole_n300", method: str = "none",
+                 backend: str = "jnp") -> List[dict]:
+    """Per-size model rows of the complex vs real-input pencil 2-D FFT on
+    ``devices`` chips: predicted wall time, energy and per-device exchange
+    wire bytes from :func:`repro.tt.trace.trace_dist`.  The headline
+    column is ``wire_ratio`` ~ (N/2)/N = 0.5 — the ROADMAP's "halve the
+    all_to_all bytes" as a number."""
+    rows = []
+    for s in sizes:
+        tc = tttrace.trace_dist((s, s), devices=devices, arch=arch,
+                                method=method, backend=backend)
+        tr = tttrace.trace_dist((s, s), devices=devices, arch=arch,
+                                method=method, backend=backend, real=True)
+        rows.append({
+            "size": int(s), "devices": devices, "arch": tc.arch,
+            "method": method,
+            "pfft2_wire_bytes": tc.exchange_wire_bytes,
+            "prfft2_wire_bytes": tr.exchange_wire_bytes,
+            "wire_ratio": tr.exchange_wire_bytes / tc.exchange_wire_bytes,
+            "pfft2_ms": tc.seconds * 1e3, "prfft2_ms": tr.seconds * 1e3,
+            "pfft2_energy_j": tc.energy_j, "prfft2_energy_j": tr.energy_j,
+        })
+    return rows
+
+
+def dist_markdown_table(rows: List[dict]) -> str:
+    out = [
+        "| size | devices | method | pfft2 wire (B/dev) | prfft2 wire "
+        "(B/dev) | ratio | pfft2 t (ms) | prfft2 t (ms) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['size']}x{r['size']} | {r['devices']} | {r['method']} | "
+            f"{r['pfft2_wire_bytes']:.0f} | {r['prfft2_wire_bytes']:.0f} | "
+            f"{r['wire_ratio']:.2f} | {r['pfft2_ms']:.3f} | "
+            f"{r['prfft2_ms']:.3f} |")
+    return "\n".join(out)
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)

@@ -268,6 +268,14 @@ def _transpose_stage(name: str, arch: Arch, *, h: int, w: int, batch: int,
 # Plan walkers
 # ---------------------------------------------------------------------------
 
+def plan_elem_bytes(plan) -> int:
+    """Bytes per split-complex element (re+im) of this plan's dtype: 8 for
+    float32, 4 for bfloat16/float16 — how the tracer knows a bf16 plan
+    moves half the DRAM/NoC/SRAM bytes of an f32 one."""
+    import jax.numpy as jnp
+    return 2 * jnp.dtype(getattr(plan, "dtype", "float32")).itemsize
+
+
 def trace_plan(plan, *, arch="wormhole_n300", batch: int = 1) -> PlanTrace:
     """Trace one :class:`repro.core.plan.FFTPlan` (any object exposing
     ``shape / algo / radix / block_batch / backend``, plus ``kind`` and
@@ -277,10 +285,12 @@ def trace_plan(plan, *, arch="wormhole_n300", batch: int = 1) -> PlanTrace:
     (the leading batch dim).  rfft-kind plans trace their actual schedule
     — inner half-length complex pass plus the O(n) untangle, half-width
     spectrum planes downstream — so the half-spectrum saving shows up in
-    the bytes, not as a fudge factor.
+    the bytes, not as a fudge factor.  Element width comes from the plan's
+    dtype (:func:`plan_elem_bytes`): a bfloat16 plan traces at half the
+    DRAM/NoC/SRAM cost of the float32 plan of the same shape.
     """
     a = get_arch(arch)
-    elem = 8                                   # split-complex f32: re+im
+    elem = plan_elem_bytes(plan)
     stages: List[TraceStage] = []
 
     if getattr(plan, "kind", "c2c") == "rfft":
@@ -412,3 +422,153 @@ def predict_cost(plan, *, arch="wormhole_n300", batch: int = 1) -> float:
     outrank a runnable one)."""
     t = trace_plan(plan, arch=arch, batch=batch)
     return t.seconds if t.fits else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Distributed pencil schedules (multi-chip)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistTrace:
+    """A multi-chip pencil-FFT schedule walked stage by stage: per-shard
+    local plan stages (through :func:`trace_plan`) interleaved with the
+    inter-chip exchange legs (priced by :func:`repro.tt.noc.all_to_all_s`
+    on the arch's ethernet/ICI hop table).  Per-device accounting: stage
+    seconds are wall time (every chip runs its shard in parallel), and
+    ``exchange_wire_bytes`` is what one device puts on the wire."""
+    arch: str
+    shape: Tuple[int, ...]
+    devices: int
+    kind: str                        # "pfft2" | "prfft2"
+    method: str                      # compression wire format of the exchange
+    backend: str
+    elem_bytes: int
+    batch: int
+    stages: Tuple[TraceStage, ...]
+    sram_budget: int
+
+    @property
+    def seconds(self) -> float:
+        return sum(s.seconds for s in self.stages)
+
+    @property
+    def flops(self) -> float:
+        return sum(s.flops for s in self.stages)
+
+    @property
+    def dram_bytes(self) -> float:
+        return sum(s.dram_bytes for s in self.stages)
+
+    @property
+    def energy_j(self) -> float:
+        return sum(s.energy_j for s in self.stages)
+
+    @property
+    def exchange_wire_bytes(self) -> float:
+        """Bytes one device ships across chips, all exchange legs summed."""
+        return sum(s.noc_bytes for s in self.stages
+                   if s.name.startswith("exchange"))
+
+    @property
+    def exchange_seconds(self) -> float:
+        return sum(s.seconds for s in self.stages
+                   if s.name.startswith("exchange"))
+
+    @property
+    def sram_high_water(self) -> int:
+        return max((s.sram_high_water for s in self.stages), default=0)
+
+    @property
+    def fits(self) -> bool:
+        return self.sram_high_water <= self.sram_budget
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": list(self.shape),
+            "devices": self.devices, "kind": self.kind,
+            "method": self.method, "backend": self.backend,
+            "elem_bytes": self.elem_bytes, "batch": self.batch,
+            "seconds": self.seconds, "flops": self.flops,
+            "dram_bytes": self.dram_bytes, "energy_j": self.energy_j,
+            "exchange_wire_bytes": self.exchange_wire_bytes,
+            "exchange_seconds": self.exchange_seconds,
+            "sram_high_water": self.sram_high_water,
+            "sram_budget": self.sram_budget, "fits": self.fits,
+            "stages": [s.to_dict() for s in self.stages],
+        }
+
+
+def _exchange_stage(name: str, a: Arch, *, payload_bytes: float,
+                    devices: int) -> TraceStage:
+    """One inter-chip all_to_all leg.  ``payload_bytes`` is the per-device
+    payload already in its wire format, so it is priced method="none" here
+    (no double compression discount)."""
+    x = ttnoc.all_to_all_s(float(payload_bytes), devices, a, multichip=True)
+    e_link = a.energy_per_link_byte_j or a.energy_per_noc_byte_j
+    energy = x["wire_bytes"] * e_link + a.idle_power_w * x["seconds"]
+    return TraceStage(name=name, seconds=x["seconds"],
+                      noc_bytes=x["wire_bytes"], energy_j=energy,
+                      bound="link")
+
+
+def trace_dist(shape, *, devices: int, arch="wormhole_n300",
+               real: bool = False, method: str = "none",
+               dtype="float32", backend: str = "jnp",
+               transposed_output: bool = True, batch: int = 1) -> DistTrace:
+    """Trace one :func:`repro.dist.pencil.pfft2` (``real=False``) or
+    :func:`~repro.dist.pencil.prfft2` (``real=True``) schedule end-to-end
+    on ``devices`` chips of ``arch``.
+
+    Local passes resolve through the plan registry — the *same* entries
+    the pencil functions execute (rfft-kind rows for ``real=True``) — and
+    are traced per shard with :func:`trace_plan`; the exchange legs take
+    their per-device payload from
+    :func:`repro.dist.pencil.exchange_bytes` (so model and wire log can
+    never drift) and their time from the multi-chip hop table.  The
+    headline query: ``trace_dist(.., real=True)`` predicts half the
+    exchange wire bytes of the complex schedule.
+    """
+    import jax.numpy as jnp
+    from repro.core import plan as plan_lib
+    from repro.dist.pencil import exchange_bytes
+
+    a = get_arch(arch)
+    h, w = (int(d) for d in shape)
+    devices = int(devices)
+    cols_total = w // 2 if real else w          # pencils after the exchange
+    assert h % devices == 0 and cols_total % devices == 0, \
+        (shape, devices, real)
+    elem = 2 * jnp.dtype(dtype).itemsize
+    kind = "prfft2" if real else "pfft2"
+    stages: List[TraceStage] = []
+
+    row_plan = plan_lib.get_plan((w,), dtype=dtype, backend=backend,
+                                 kind="rfft" if real else "c2c")
+    rt = trace_plan(row_plan, arch=a, batch=batch * h // devices)
+    stages += [dataclasses.replace(s, name=f"rows/{s.name}")
+               for s in rt.stages]
+
+    payload = batch * exchange_bytes(h, w, devices, real=real, method=method,
+                                     dtype=dtype)
+    stages.append(_exchange_stage("exchange_a2a", a, payload_bytes=payload,
+                                  devices=devices))
+
+    cols = batch * cols_total // devices
+    col_plan = plan_lib.get_plan((h,), dtype=dtype, backend=backend)
+    ct = trace_plan(col_plan, arch=a, batch=cols)
+    stages += [dataclasses.replace(s, name=f"cols/{s.name}")
+               for s in ct.stages]
+
+    if real:
+        # the local O(H) Hermitian untangle of the packed DC/Nyquist column
+        stages.append(_untangle_stage("unpack_nyquist", a, n=2 * h,
+                                      rows=batch, elem_bytes=elem))
+    if not transposed_output:
+        stages.append(_exchange_stage("exchange_a2a_out", a,
+                                      payload_bytes=payload,
+                                      devices=devices))
+
+    return DistTrace(arch=a.name, shape=(h, w), devices=devices, kind=kind,
+                     method=method, backend=backend, elem_bytes=elem,
+                     batch=batch, stages=tuple(stages),
+                     sram_budget=a.sram_budget)

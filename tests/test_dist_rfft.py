@@ -1,0 +1,163 @@
+"""Distributed real-input pencil FFT: prfft2/pirfft2 correctness, the
+Hermitian invariants of the exchanged pencils, and the halved exchange
+bytes — measured (wire log) and predicted (trace_dist) — per wire format.
+(8 fake devices, subprocess; the model-side assertions run in-process.)"""
+import math
+
+import pytest
+
+from _subproc import run_with_devices
+
+CODE = r"""
+import math
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.complexmath import from_complex, to_complex, SplitComplex
+from repro.core import fft2d, rfft
+from repro.dist import pencil
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(0)
+mesh = make_mesh((8,), ("data",))
+P8 = 8
+
+
+def gathered(sc):
+    return SplitComplex(jnp.asarray(np.asarray(sc.re)),
+                        jnp.asarray(np.asarray(sc.im)))
+
+
+def rel(got, ref):
+    return np.abs(got - ref).max() / np.abs(ref).max()
+
+
+for H, W in ((128, 128), (64, 256), (512, 512), (1024, 1024)):
+    x = rng.standard_normal((H, W)).astype(np.float32)
+    sh = NamedSharding(mesh, P("data", None))
+    xr = jax.device_put(jnp.asarray(x), sh)
+    ref = np.fft.rfft2(x)
+
+    # acceptance: prfft2 == numpy.fft.rfft2 at rel err <= 1e-6 (fp32)
+    out = pencil.prfft2(xr, mesh, "data")
+    spec = pencil.unpack_half_spectrum(gathered(out))
+    got = np.asarray(to_complex(spec)).T
+    assert rel(got, ref) <= 1e-6, (H, W, rel(got, ref))
+
+    # ...and == the single-chip plan-registry rfft2 (not just numpy)
+    loc = np.asarray(to_complex(fft2d.rfft2(jnp.asarray(x))))
+    assert rel(got, loc) < 1e-5, (H, W)
+
+    # ...and == pfft2 of the zero-imag complex input on the unique bins
+    xc = SplitComplex(xr, jnp.zeros_like(xr))
+    full = np.asarray(to_complex(pencil.pfft2(xc, mesh, "data"))).T
+    assert rel(got, full[:, : W // 2 + 1]) < 1e-5, (H, W)
+
+    # roundtrip through the packed layout
+    back = np.asarray(pencil.pirfft2(out, mesh, "data"))
+    assert np.abs(back - x).max() < 1e-4, (H, W)
+
+# Hermitian invariants of the exchanged pencils (H, W from the last loop
+# iteration): the row rfft's DC and Nyquist bins are *exactly* real — that
+# is what makes the pack information-tight...
+y = to_complex(rfft(jnp.asarray(x)))
+assert np.abs(np.imag(np.asarray(y)[:, 0])).max() == 0.0
+assert np.abs(np.imag(np.asarray(y)[:, W // 2])).max() == 0.0
+# ...and the unpacked DC/Nyquist columns are conjugate-symmetric along H
+spec = np.asarray(to_complex(pencil.unpack_half_spectrum(
+    gathered(pencil.prfft2(xr, mesh, "data"))))).T
+for col in (0, W // 2):
+    c = spec[:, col]
+    sym = np.conj(c[(-np.arange(H)) % H])
+    assert np.abs(c - sym).max() / np.abs(c).max() < 1e-5, col
+
+# halved exchange bytes, measured by the wire log, per compression dtype
+H = W = 512
+x = rng.standard_normal((H, W)).astype(np.float32)
+xr = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data", None)))
+xc = SplitComplex(xr, jnp.zeros_like(xr))
+ref = np.fft.rfft2(x)
+for method, tol in (("none", 1e-5), ("bf16", 5e-2), ("int8", 0.35)):
+    pencil.reset_wire_log()
+    o_r = pencil.prfft2(xr, mesh, "data", compress=method)
+    wire_r = pencil.logged_exchange_bytes()
+    pencil.reset_wire_log()
+    pencil.pfft2(xc, mesh, "data", compress=method)
+    wire_c = pencil.logged_exchange_bytes()
+    assert wire_r <= math.ceil((W // 2 + 1) / W * wire_c), (method, wire_r)
+    assert wire_r * 2 == wire_c, (method, wire_r, wire_c)
+    assert wire_r == pencil.exchange_bytes(H, W, P8, real=True,
+                                           method=method), method
+    g = np.asarray(to_complex(pencil.unpack_half_spectrum(gathered(o_r)))).T
+    assert rel(g, ref) < tol, (method, rel(g, ref))
+
+# pirfft2 honours s= with numpy truncate/pad semantics (all fits local)
+spec_t = from_complex(jnp.asarray(ref.T.astype(np.complex64)))
+packed = pencil.pack_half_spectrum(spec_t)
+shp = NamedSharding(mesh, P("data", None))
+packed = SplitComplex(jax.device_put(packed.re, shp),
+                      jax.device_put(packed.im, shp))
+for s in (None, (512, 256), (512, 1024), (256, 512), (256, 384)):
+    got_i = np.asarray(pencil.pirfft2(packed, mesh, "data", s=s))
+    ref_i = np.fft.irfft2(ref, s=s) if s else np.fft.irfft2(ref)
+    assert got_i.shape == ref_i.shape, (s, got_i.shape)
+    assert rel(got_i, ref_i) < 1e-4, (s, rel(got_i, ref_i))
+
+# natural (non-transposed) output spends a second packed all_to_all
+pencil.reset_wire_log()
+o_n = pencil.prfft2(xr, mesh, "data", transposed_output=False)
+assert pencil.logged_exchange_bytes() == \
+    pencil.exchange_bytes(H, W, P8, real=True, transposed_output=False)
+g_n = np.asarray(to_complex(pencil.unpack_half_spectrum(
+    pencil._swap_last2(gathered(o_n))))).T
+assert rel(g_n, ref) <= 1e-6
+print("DIST_RFFT_OK")
+"""
+
+
+def test_prfft2_8dev():
+    out = run_with_devices(CODE, 8)
+    assert "DIST_RFFT_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Model-side assertions (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_exchange_bytes_helper_halves_per_method():
+    import jax.numpy as jnp
+    from repro.dist import pencil
+    for n in (512, 1024):
+        for method, factor in (("none", 1), ("bf16", 2), ("int8", 4)):
+            full = pencil.exchange_bytes(n, n, 8, method=method)
+            half = pencil.exchange_bytes(n, n, 8, real=True, method=method)
+            assert full == n * (n // 8) * 4 * 2 // factor  # re+im planes
+            assert half * 2 == full
+            assert half <= math.ceil((n // 2 + 1) / n * full)
+    # a bf16 *plan* (compute dtype) halves the wire before any compression
+    assert pencil.exchange_bytes(512, 512, 8, dtype=jnp.bfloat16) \
+        == pencil.exchange_bytes(512, 512, 8) // 2
+
+
+def test_trace_dist_predicts_halved_exchange():
+    """The tentpole acceptance, model side: predicted exchange wire bytes
+    of prfft2 are ~(N/2+1)/N ~ half of pfft2's at 512^2 and 1024^2, on
+    every arch and wire format, and they agree exactly with what the
+    pencil wire log measures (same wire_bytes pricing x (p-1)/p)."""
+    from repro.dist import pencil
+    from repro.tt import trace as tttrace
+    for n in (512, 1024):
+        for arch in ("wormhole_n300", "tpu_v5e"):
+            for method in ("none", "bf16", "int8"):
+                tc = tttrace.trace_dist((n, n), devices=8, arch=arch,
+                                        method=method)
+                tr = tttrace.trace_dist((n, n), devices=8, arch=arch,
+                                        method=method, real=True)
+                assert tr.exchange_wire_bytes * 2 == tc.exchange_wire_bytes
+                assert tr.exchange_wire_bytes <= math.ceil(
+                    (n // 2 + 1) / n * tc.exchange_wire_bytes)
+                assert tr.exchange_seconds < tc.exchange_seconds
+                # the model's wire == the log's payload x the (p-1)/p
+                # fraction that actually leaves the chip
+                assert tr.exchange_wire_bytes == pytest.approx(
+                    pencil.exchange_bytes(n, n, 8, real=True,
+                                          method=method) * 7 / 8)

@@ -1,21 +1,28 @@
-"""Property-based tests (hypothesis) for the FFT core's invariants."""
-import pytest
-
-pytest.importorskip("hypothesis", reason="dev dependency (requirements-dev)")
-
-import hypothesis
-import hypothesis.strategies as st
+"""FFT invariants: a seeded, hypothesis-free round-trip sweep over every
+plan-registry kind (always runs), mirrored by hypothesis property tests
+(when the dev dependency is installed — CI asserts it is)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
-from repro.core import (fft, ifft, rfft, irfft, fft2, from_complex,
-                        to_complex, fft_conv)
+from repro.core import (clear_plan_cache, fft, fft2, fft_conv, from_complex,
+                        get_plan, ifft, irfft, irfft2, rfft, rfft2,
+                        to_complex)
 from repro.core import complexmath as cm
+from repro.core.complexmath import SplitComplex
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # dev dependency (requirements-dev)
+    HAVE_HYPOTHESIS = False
 
 ALGOS = ["naive", "cooley_tukey", "cooley_tukey_fused", "stockham",
          "four_step"]
+
+BACKENDS = ["jnp", "pallas"]
 
 
 def _rand(shape, seed):
@@ -24,101 +31,226 @@ def _rand(shape, seed):
         .astype(np.complex64)
 
 
-@settings(max_examples=20, deadline=None)
-@given(logn=st.integers(1, 10), seed=st.integers(0, 2**20),
-       algo=st.sampled_from(ALGOS))
-def test_matches_numpy(logn, seed, algo):
-    n = 1 << logn
-    x = _rand((2, n), seed)
-    got = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)), algo=algo)))
-    ref = np.fft.fft(x)
+# ---------------------------------------------------------------------------
+# Seeded plan-registry sweep (no hypothesis needed)
+# ---------------------------------------------------------------------------
+# Every registry kind x both backends x awkward shapes: odd, prime,
+# even-non-pow2, pow2 (the only shapes the kernels accept — everything else
+# must demote to jnp, not crash), under scalar and ragged batch dims.
+
+C2C_SIZES = (27, 31, 54, 64, 512)        # odd, prime, 2xodd, pow2, pow2-big
+RFFT_SIZES = (54, 62, 64, 512)           # rfft needs even lengths
+BATCHES = ((), (3,), (2, 3))             # scalar batch and ragged leading dims
+C2C_2D = ((9, 31), (12, 54), (16, 16))
+RFFT_2D = ((10, 22), (9, 54), (16, 32))
+
+
+def _assert_close(got, ref, tol=5e-4):
     scale = max(np.abs(ref).max(), 1.0)
-    np.testing.assert_allclose(got, ref, atol=5e-4 * scale, rtol=0)
+    np.testing.assert_allclose(got, ref, atol=tol * scale, rtol=0)
 
 
-@settings(max_examples=15, deadline=None)
-@given(logn=st.integers(1, 11), seed=st.integers(0, 2**20))
-def test_roundtrip(logn, seed):
-    n = 1 << logn
-    x = _rand((n,), seed)
-    z = from_complex(jnp.asarray(x))
-    back = np.asarray(to_complex(ifft(fft(z))))
-    np.testing.assert_allclose(back, x, atol=2e-3)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_plan_sweep_c2c_roundtrip_matches_numpy(backend):
+    clear_plan_cache()
+    for batch in BATCHES:
+        for seed, n in enumerate(C2C_SIZES):
+            x = _rand(batch + (n,), seed)
+            z = from_complex(jnp.asarray(x))
+            fwd = get_plan((n,), backend=backend)
+            inv = get_plan((n,), backend=backend, inverse=True)
+            _assert_close(np.asarray(to_complex(fwd(z))), np.fft.fft(x))
+            _assert_close(np.asarray(to_complex(inv(fwd(z)))), x, 2e-3)
+    clear_plan_cache()
 
 
-@settings(max_examples=15, deadline=None)
-@given(logn=st.integers(2, 10), seed=st.integers(0, 2**20),
-       a=st.floats(-3, 3), b=st.floats(-3, 3))
-def test_linearity(logn, seed, a, b):
-    n = 1 << logn
-    x, y = _rand((n,), seed), _rand((n,), seed + 1)
-    fx = to_complex(fft(from_complex(jnp.asarray(x))))
-    fy = to_complex(fft(from_complex(jnp.asarray(y))))
-    fxy = to_complex(fft(from_complex(jnp.asarray(a * x + b * y))))
-    np.testing.assert_allclose(np.asarray(fxy), a * np.asarray(fx)
-                               + b * np.asarray(fy), atol=1e-2)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_plan_sweep_rfft_roundtrip_matches_numpy(backend):
+    clear_plan_cache()
+    for batch in BATCHES:
+        for seed, n in enumerate(RFFT_SIZES):
+            rng = np.random.default_rng(100 + seed)
+            x = rng.standard_normal(batch + (n,)).astype(np.float32)
+            fwd = get_plan((n,), backend=backend, kind="rfft")
+            inv = get_plan((n,), backend=backend, kind="rfft", inverse=True)
+            _assert_close(np.asarray(to_complex(fwd(jnp.asarray(x)))),
+                          np.fft.rfft(x))
+            _assert_close(np.asarray(inv(fwd(jnp.asarray(x)))), x, 2e-3)
+    clear_plan_cache()
 
 
-@settings(max_examples=15, deadline=None)
-@given(logn=st.integers(1, 11), seed=st.integers(0, 2**20))
-def test_parseval(logn, seed):
-    n = 1 << logn
-    x = _rand((n,), seed)
-    fx = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
-    e_time = np.sum(np.abs(x) ** 2)
-    e_freq = np.sum(np.abs(fx) ** 2) / n
-    np.testing.assert_allclose(e_freq, e_time, rtol=1e-3)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_plan_sweep_2d_roundtrip_matches_numpy(backend):
+    clear_plan_cache()
+    for batch in BATCHES:
+        for seed, hw in enumerate(C2C_2D):
+            x = _rand(batch + hw, 200 + seed)
+            z = from_complex(jnp.asarray(x))
+            fwd = get_plan(hw, backend=backend)
+            inv = get_plan(hw, backend=backend, inverse=True)
+            _assert_close(np.asarray(to_complex(fwd(z))), np.fft.fft2(x))
+            _assert_close(np.asarray(to_complex(inv(fwd(z)))), x, 2e-3)
+        for seed, hw in enumerate(RFFT_2D):
+            rng = np.random.default_rng(300 + seed)
+            x = rng.standard_normal(batch + hw).astype(np.float32)
+            fwd = get_plan(hw, backend=backend, kind="rfft")
+            inv = get_plan(hw, backend=backend, kind="rfft", inverse=True)
+            _assert_close(np.asarray(to_complex(fwd(jnp.asarray(x)))),
+                          np.fft.rfft2(x))
+            _assert_close(np.asarray(inv(fwd(jnp.asarray(x)))), x, 2e-3)
+    clear_plan_cache()
 
 
-@settings(max_examples=10, deadline=None)
-@given(logn=st.integers(3, 9), shift=st.integers(0, 63),
-       seed=st.integers(0, 2**20))
-def test_shift_theorem(logn, shift, seed):
-    n = 1 << logn
-    shift = shift % n
-    x = _rand((n,), seed)
-    fx = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
-    fxs = np.asarray(to_complex(fft(from_complex(
-        jnp.asarray(np.roll(x, -shift))))))
-    phase = np.exp(2j * np.pi * shift * np.arange(n) / n)
-    np.testing.assert_allclose(fxs, fx * phase, atol=5e-3 * max(
-        np.abs(fx).max(), 1.0))
+def test_irfft2_explicit_shape_matches_numpy():
+    """irfft2 honours s= with numpy truncate/pad semantics on both algo
+    paths (the registry rfft-kind key and an explicit algo)."""
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((2, 24, 32)).astype(np.float32)
+    spec = np.fft.rfft2(x)
+    xf = from_complex(jnp.asarray(spec.astype(np.complex64)))
+    for s in (None, (24, 16), (24, 64), (12, 32), (48, 32), (12, 48),
+              (36, 20)):
+        ref = np.fft.irfft2(spec, s=s) if s else np.fft.irfft2(spec)
+        for kw in ({}, {"algo": "naive"}):
+            got = np.asarray(irfft2(xf, s=s, **kw))
+            assert got.shape == ref.shape, (s, kw, got.shape)
+            _assert_close(got, ref, 2e-4)
+    with pytest.raises(AssertionError, match="even"):
+        irfft2(xf, s=(24, 31))
 
 
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(2, 600), seed=st.integers(0, 2**20))
-def test_arbitrary_length_bluestein(n, seed):
-    x = _rand((n,), seed)
-    got = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
-    ref = np.fft.fft(x)
-    scale = max(np.abs(ref).max(), 1.0)
-    np.testing.assert_allclose(got, ref, atol=2e-3 * scale)
+# ---------------------------------------------------------------------------
+# Hypothesis mirrors (deep randomised variants of the sweep above)
+# ---------------------------------------------------------------------------
 
+if HAVE_HYPOTHESIS:
 
-@settings(max_examples=15, deadline=None)
-@given(logn=st.integers(1, 10), seed=st.integers(0, 2**20))
-def test_rfft_hermitian_and_matches(logn, seed):
-    n = 1 << logn
-    rng = np.random.default_rng(seed)
-    x = rng.standard_normal((3, n)).astype(np.float32)
-    got = np.asarray(to_complex(rfft(jnp.asarray(x))))
-    ref = np.fft.rfft(x)
-    scale = max(np.abs(ref).max(), 1.0)
-    np.testing.assert_allclose(got, ref, atol=5e-4 * scale)
-    back = np.asarray(irfft(rfft(jnp.asarray(x))))
-    np.testing.assert_allclose(back, x, atol=2e-3)
+    @settings(max_examples=20, deadline=None)
+    @given(logn=st.integers(1, 10), seed=st.integers(0, 2**20),
+           algo=st.sampled_from(ALGOS))
+    def test_matches_numpy(logn, seed, algo):
+        n = 1 << logn
+        x = _rand((2, n), seed)
+        got = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)),
+                                        algo=algo)))
+        ref = np.fft.fft(x)
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(got, ref, atol=5e-4 * scale, rtol=0)
 
+    @settings(max_examples=15, deadline=None)
+    @given(logn=st.integers(1, 11), seed=st.integers(0, 2**20))
+    def test_roundtrip(logn, seed):
+        n = 1 << logn
+        x = _rand((n,), seed)
+        z = from_complex(jnp.asarray(x))
+        back = np.asarray(to_complex(ifft(fft(z))))
+        np.testing.assert_allclose(back, x, atol=2e-3)
 
-@settings(max_examples=10, deadline=None)
-@given(logl=st.integers(3, 8), k=st.integers(1, 16), seed=st.integers(0, 2**18))
-def test_fftconv_matches_direct(logl, k, seed):
-    L = 1 << logl
-    rng = np.random.default_rng(seed)
-    sig = rng.standard_normal((2, L)).astype(np.float32)
-    ker = rng.standard_normal((2, k)).astype(np.float32)
-    got = np.asarray(fft_conv(jnp.asarray(sig), jnp.asarray(ker)))
-    ref = np.stack([np.convolve(s, kk)[:L] for s, kk in zip(sig, ker)])
-    np.testing.assert_allclose(got, ref, atol=2e-3 * max(1.0, np.abs(ref).max()))
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(2, 200), seed=st.integers(0, 2**20),
+           batch=st.integers(1, 4), backend=st.sampled_from(BACKENDS))
+    def test_plan_registry_roundtrip_property(n, seed, batch, backend):
+        """The hypothesis mirror of the c2c sweep: any length, any batch,
+        either backend — the registry must roundtrip through whatever
+        algo/demotion it resolves."""
+        x = _rand((batch, n), seed)
+        z = from_complex(jnp.asarray(x))
+        fwd = get_plan((n,), backend=backend)
+        inv = get_plan((n,), backend=backend, inverse=True)
+        got = np.asarray(to_complex(fwd(z)))
+        ref = np.fft.fft(x)
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(got, ref, atol=2e-3 * scale, rtol=0)
+        np.testing.assert_allclose(np.asarray(to_complex(inv(fwd(z)))), x,
+                                   atol=2e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(half=st.integers(1, 100), seed=st.integers(0, 2**20),
+           backend=st.sampled_from(BACKENDS))
+    def test_plan_registry_rfft_roundtrip_property(half, seed, backend):
+        """The hypothesis mirror of the rfft sweep: any even length."""
+        n = 2 * half
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((3, n)).astype(np.float32)
+        fwd = get_plan((n,), backend=backend, kind="rfft")
+        inv = get_plan((n,), backend=backend, kind="rfft", inverse=True)
+        got = np.asarray(to_complex(fwd(jnp.asarray(x))))
+        ref = np.fft.rfft(x)
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(got, ref, atol=2e-3 * scale, rtol=0)
+        np.testing.assert_allclose(np.asarray(inv(fwd(jnp.asarray(x)))), x,
+                                   atol=2e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(logn=st.integers(2, 10), seed=st.integers(0, 2**20),
+           a=st.floats(-3, 3), b=st.floats(-3, 3))
+    def test_linearity(logn, seed, a, b):
+        n = 1 << logn
+        x, y = _rand((n,), seed), _rand((n,), seed + 1)
+        fx = to_complex(fft(from_complex(jnp.asarray(x))))
+        fy = to_complex(fft(from_complex(jnp.asarray(y))))
+        fxy = to_complex(fft(from_complex(jnp.asarray(a * x + b * y))))
+        np.testing.assert_allclose(np.asarray(fxy), a * np.asarray(fx)
+                                   + b * np.asarray(fy), atol=1e-2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(logn=st.integers(1, 11), seed=st.integers(0, 2**20))
+    def test_parseval(logn, seed):
+        n = 1 << logn
+        x = _rand((n,), seed)
+        fx = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
+        e_time = np.sum(np.abs(x) ** 2)
+        e_freq = np.sum(np.abs(fx) ** 2) / n
+        np.testing.assert_allclose(e_freq, e_time, rtol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(logn=st.integers(3, 9), shift=st.integers(0, 63),
+           seed=st.integers(0, 2**20))
+    def test_shift_theorem(logn, shift, seed):
+        n = 1 << logn
+        shift = shift % n
+        x = _rand((n,), seed)
+        fx = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
+        fxs = np.asarray(to_complex(fft(from_complex(
+            jnp.asarray(np.roll(x, -shift))))))
+        phase = np.exp(2j * np.pi * shift * np.arange(n) / n)
+        np.testing.assert_allclose(fxs, fx * phase, atol=5e-3 * max(
+            np.abs(fx).max(), 1.0))
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(2, 600), seed=st.integers(0, 2**20))
+    def test_arbitrary_length_bluestein(n, seed):
+        x = _rand((n,), seed)
+        got = np.asarray(to_complex(fft(from_complex(jnp.asarray(x)))))
+        ref = np.fft.fft(x)
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(got, ref, atol=2e-3 * scale)
+
+    @settings(max_examples=15, deadline=None)
+    @given(logn=st.integers(1, 10), seed=st.integers(0, 2**20))
+    def test_rfft_hermitian_and_matches(logn, seed):
+        n = 1 << logn
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((3, n)).astype(np.float32)
+        got = np.asarray(to_complex(rfft(jnp.asarray(x))))
+        ref = np.fft.rfft(x)
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(got, ref, atol=5e-4 * scale)
+        back = np.asarray(irfft(rfft(jnp.asarray(x))))
+        np.testing.assert_allclose(back, x, atol=2e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(logl=st.integers(3, 8), k=st.integers(1, 16),
+           seed=st.integers(0, 2**18))
+    def test_fftconv_matches_direct(logl, k, seed):
+        L = 1 << logl
+        rng = np.random.default_rng(seed)
+        sig = rng.standard_normal((2, L)).astype(np.float32)
+        ker = rng.standard_normal((2, k)).astype(np.float32)
+        got = np.asarray(fft_conv(jnp.asarray(sig), jnp.asarray(ker)))
+        ref = np.stack([np.convolve(s, kk)[:L] for s, kk in zip(sig, ker)])
+        np.testing.assert_allclose(got, ref,
+                                   atol=2e-3 * max(1.0, np.abs(ref).max()))
 
 
 def test_fft2_matches_numpy():
@@ -133,5 +265,7 @@ def test_karatsuba_mul_matches():
     b = from_complex(jnp.asarray(_rand((128,), 2)))
     m4 = cm.mul(a, b)
     m3 = cm.mul3(a, b)
-    np.testing.assert_allclose(np.asarray(m3.re), np.asarray(m4.re), atol=1e-4)
-    np.testing.assert_allclose(np.asarray(m3.im), np.asarray(m4.im), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m3.re), np.asarray(m4.re),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m3.im), np.asarray(m4.im),
+                               atol=1e-4)

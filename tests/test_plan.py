@@ -220,3 +220,64 @@ def test_tuned_2d_plan_executes():
     ref = np.fft.fft2(z)
     assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
     assert autotune_count((32, 32), backend="pallas") == 1
+
+
+# ---------------------------------------------------------------------------
+# Wisdom auto-load from $REPRO_FFT_WISDOM (import-time, subprocess-tested)
+# ---------------------------------------------------------------------------
+
+def _import_with_wisdom_env(value):
+    """Import repro.core.plan in a fresh interpreter with REPRO_FFT_WISDOM
+    set (or unset for None) and report (autoloaded_count, tuned_plan_info)."""
+    import os
+    import subprocess
+    import sys
+    code = (
+        "from repro.core import plan as P\n"
+        "pl = P.get_plan((256,), tune=True)\n"
+        "src = (pl.tune_report or {}).get('source', 'measured')\n"
+        "print('WISDOM', P.WISDOM_AUTOLOADED, src, P.autotune_count((256,)))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env.pop("REPRO_FFT_WISDOM", None)
+    if value is not None:
+        env["REPRO_FFT_WISDOM"] = value
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("WISDOM")][0]
+    _, count, source, tuned_runs = line.split()
+    return int(count), source, int(tuned_runs)
+
+
+def test_wisdom_autoload_from_env(tmp_path):
+    """A valid wisdom file named by $REPRO_FFT_WISDOM installs its plans at
+    import, so a later tune=True request skips the measuring autotuner."""
+    path = str(tmp_path / "wisdom.json")
+    clear_plan_cache()
+    get_plan((256,), tune=True)
+    assert save_wisdom(path) == 1
+    clear_plan_cache()
+    count, source, tuned_runs = _import_with_wisdom_env(path)
+    assert (count, source, tuned_runs) == (1, "wisdom", 0)
+
+
+def test_wisdom_autoload_unset_missing_and_corrupt(tmp_path):
+    """Unset, empty, missing-file and corrupt-file paths must all be
+    harmless no-ops at import (the registry simply starts cold)."""
+    for value in (None, "", str(tmp_path / "nope.json")):
+        count, source, tuned_runs = _import_with_wisdom_env(value)
+        assert (count, source, tuned_runs) == (0, "measured", 1), value
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{not json")
+    count, source, tuned_runs = _import_with_wisdom_env(str(corrupt))
+    assert (count, source, tuned_runs) == (0, "measured", 1)
+    # ...and wrong-schema-but-valid-JSON files are equally harmless, down
+    # to a top-level type that is not even a dict
+    for text in ('{"version": 1, "entries": [{"key": 3}]}', "[1, 2, 3]",
+                 '{"version": 1, "entries": 7}'):
+        corrupt.write_text(text)
+        count, source, tuned_runs = _import_with_wisdom_env(str(corrupt))
+        assert (count, source, tuned_runs) == (0, "measured", 1), text

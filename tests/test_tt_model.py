@@ -207,6 +207,129 @@ def test_vmem_high_water_regression_1024_fused():
     assert tttrace.trace_plan(_fused(1024), arch="wormhole_n300").fits
 
 
+def test_trace_bf16_plans_halve_movement_golden():
+    """Golden pin (ROADMAP: teach the tracer about bf16 plans): a bfloat16
+    fused 1024^2 plan traces at exactly half the fp32 DRAM/SRAM bytes, its
+    VMEM high-water drops from the pinned 16838656 B to 8419328 B, and the
+    PR 3 "does 1024x1024 fit in 16 MiB v5e VMEM?" answer flips to True."""
+    f32 = tttrace.trace_plan(_fused(1024), arch="tpu_v5e")
+    bf16 = tttrace.trace_plan(
+        FFTPlan(shape=(1024, 1024), dtype="bfloat16", algo="fused",
+                backend="pallas", block_batch=1), arch="tpu_v5e")
+    assert tttrace.plan_elem_bytes(_fused(1024)) == 8
+    assert tttrace.plan_elem_bytes(
+        FFTPlan(shape=(1024, 1024), dtype="bfloat16", algo="fused",
+                backend="pallas")) == 4
+    assert f32.sram_high_water == 16838656 and not f32.fits
+    assert bf16.sram_high_water == 16838656 // 2 == 8419328
+    assert bf16.fits and bf16.sram_budget == 16 * MIB
+    assert bf16.dram_bytes == f32.dram_bytes / 2
+    s32, s16 = f32.stages[0], bf16.stages[0]
+    assert s16.sram_bytes == s32.sram_bytes / 2
+    assert s16.noc_bytes == s32.noc_bytes / 2
+    assert bf16.energy_j < f32.energy_j
+    assert bf16.flops == f32.flops          # same math, narrower planes
+    # ...and the model query flips: the bf16 plan is now rankable
+    bf16_plan = FFTPlan(shape=(1024, 1024), dtype="bfloat16", algo="fused",
+                        backend="pallas", block_batch=1)
+    assert tttrace.predict_cost(bf16_plan, arch="tpu_v5e") < float("inf")
+    # the halving also reaches the NoC transpose path (row_col, tensix)
+    r32 = tttrace.trace_plan(_row_col(512), arch="wormhole_n300")
+    r16 = tttrace.trace_plan(
+        FFTPlan(shape=(512, 512), dtype="bfloat16", algo="row_col",
+                backend="pallas", block_batch=8), arch="wormhole_n300")
+    assert r16.noc_bytes == r32.noc_bytes / 2
+
+
+def test_trace_dist_pencil_schedule_golden():
+    """Golden regression for the extended tracer: the multi-chip pencil
+    schedules walk per-shard plan stages + exchange legs, and the rfft2
+    schedule's exchange is exactly half the complex one's."""
+    from repro.core import clear_plan_cache
+    clear_plan_cache()
+    tc = tttrace.trace_dist((512, 512), devices=8, arch="wormhole_n300")
+    tr = tttrace.trace_dist((512, 512), devices=8, arch="wormhole_n300",
+                            real=True)
+    assert [s.name for s in tc.stages] == [
+        "rows/fft1d_four_step", "exchange_a2a", "cols/fft1d_four_step"]
+    assert [s.name for s in tr.stages] == [
+        "rows/rfft_inner_naive", "rows/rfft_untangle", "exchange_a2a",
+        "cols/fft1d_four_step", "unpack_nyquist"]
+    # per-device payload 64x512 (vs 64x256 packed) split-complex f32,
+    # (p-1)/p of it crossing chips
+    assert tc.exchange_wire_bytes == 64 * 512 * 8 * 7 / 8 == 229376.0
+    assert tr.exchange_wire_bytes == 114688.0
+    assert tr.kind == "prfft2" and tr.devices == 8 and tr.elem_bytes == 8
+    assert tr.seconds > 0 and tr.energy_j > 0 and tr.fits
+    d = tr.to_dict()
+    assert d["exchange_wire_bytes"] == 114688.0
+    assert len(d["stages"]) == 5
+    # a second (still packed) exchange restores natural order
+    tn = tttrace.trace_dist((512, 512), devices=8, arch="wormhole_n300",
+                            real=True, transposed_output=False)
+    assert tn.exchange_wire_bytes == 2 * tr.exchange_wire_bytes
+    # the multi-chip hop table prices the legs: more chips, more hops
+    assert ttnoc.eth_hops(8) == pytest.approx(1.5)      # 2x4 chip mesh
+    assert ttnoc.eth_hops(2) < ttnoc.eth_hops(8) < ttnoc.eth_hops(32)
+    x8 = ttnoc.all_to_all_s(1 << 20, 8, "wormhole_n300", multichip=True)
+    assert x8["grid"] == (2, 4) and x8["hops"] == pytest.approx(1.5)
+    # 16 ethernet links at 12.5 GB/s serialise the wire + 1.5 us of hops
+    wire = (1 << 20) * 7 / 8
+    assert x8["seconds"] == pytest.approx(wire / 200e9 + 1.5e-6)
+    clear_plan_cache()
+
+
+def test_dist_model_bench_predicted_rows_golden():
+    """Pin the predicted side of BENCH_dist_model.json (the measured side
+    is corroborated by tests/test_dist_rfft.py on emulated devices): at
+    512^2 and 1024^2 the model ranks prfft2's exchange at exactly half of
+    pfft2's on every arch, inside the (N/2+1)/N Hermitian bound."""
+    import math
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import table6_dist_model as t6
+    from repro.core import clear_plan_cache
+    clear_plan_cache()
+    rows = t6.predicted_rows((512, 1024), methods=("none", "bf16"))
+    for n in (512, 1024):
+        row = rows[f"{n}x{n}"]
+        for arch in t6.MODEL_ARCHS:
+            for method in ("none", "bf16"):
+                a = row[f"pfft2/{method}/{arch}"]
+                b = row[f"prfft2/{method}/{arch}"]
+                assert row[f"wire_ratio/{method}/{arch}"] == 0.5
+                assert b["exchange_wire_bytes"] <= math.ceil(
+                    (n // 2 + 1) / n * a["exchange_wire_bytes"])
+                assert a["us"] > 0 and b["energy_j"] > 0
+                assert "exchange_a2a" in b["stages"]
+    clear_plan_cache()
+
+
+def test_dist_model_bench_ranking_artifact_agrees():
+    """The committed BENCH_dist_model.json must carry all-True
+    predicted-vs-measured wire agreement rows (regenerate with
+    ``python -m benchmarks.table6_dist_model`` if the model changes)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_dist_model.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_dist_model.json not generated yet")
+    with open(path) as fh:
+        data = json.load(fh)
+    ranking = data["ranking"]
+    assert ranking, "empty ranking section"
+    for size, row in ranking.items():
+        for key, val in row.items():
+            if key.startswith(("wire_ratio_agrees", "wire_order_agrees",
+                               "halved_bound_holds")):
+                assert val is True, (size, key)
+            if key.startswith("measured_wire_ratio"):
+                assert val == pytest.approx(0.5), (size, key, val)
+
+
 def test_trace_1d_plans_and_energy_scaling():
     small = tttrace.trace_plan(FFTPlan(shape=(4096,), algo="stockham"),
                                arch="wormhole_n300", batch=8)
