@@ -489,7 +489,34 @@ def fft_axis(x: SplitComplex, axis: int, *, inverse: bool = False,
 # Real-input transforms
 # ---------------------------------------------------------------------------
 
-def rfft(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
+# the 1-D algos with a Pallas kernel path: _fft_inner dispatches these to
+# repro.kernels.ops, and the plan registry demotes pallas rfft requests
+# whose inner algo is not in this set (single source of truth — extend it
+# when a new kernel lands)
+KERNEL_INNER_ALGOS = ("stockham", "stockham2", "four_step")
+
+
+def _fft_inner(z: SplitComplex, *, inverse: bool = False, algo: str,
+               backend: str = "jnp", radix: int = 4,
+               block_batch: int = 8) -> SplitComplex:
+    """The inner complex transform of the real-input paths.  On
+    ``backend="pallas"`` the kernel-backed algos (:data:`KERNEL_INNER_ALGOS`)
+    dispatch to :mod:`repro.kernels.ops` (the plan registry only hands out
+    pallas rfft plans whose inner algo has a kernel); everything else runs
+    the jnp algorithms."""
+    if backend == "pallas" and algo in KERNEL_INNER_ALGOS:
+        from repro.kernels import ops as kops
+        if algo == "four_step":
+            return kops.fft_fourstep(z, inverse=inverse,
+                                     block_batch=min(4, block_batch))
+        return kops.fft_stockham(z, inverse=inverse,
+                                 radix=2 if algo == "stockham2" else radix,
+                                 block_batch=block_batch)
+    return fft(z, inverse=inverse, algo=algo)
+
+
+def rfft(x: jnp.ndarray, *, algo: str = "auto",
+         backend: str = "jnp") -> SplitComplex:
     """Real-input FFT via the packed half-size complex transform.
 
     Packs even/odd samples into one complex sequence of length N/2 — halves
@@ -500,21 +527,25 @@ def rfft(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
     ``algo="auto"`` routes through the plan registry under an rfft-kind
     key, so the inner complex algo (length N/2) is resolved once per
     (shape, dtype) and the decision is shared with every later call.
+    ``backend="pallas"`` runs the inner transform on the Pallas kernels
+    (demoting with a registry-visible reason when no kernel path exists).
     """
     if algo == "auto":
         from . import plan as _plan
         return _plan.get_plan((x.shape[-1],), dtype=x.dtype,
-                              kind="rfft")(x)
-    return _rfft_direct(x, algo=algo)
+                              kind="rfft", backend=backend)(x)
+    return _rfft_direct(x, algo=algo, backend=backend)
 
 
-def _rfft_direct(x: jnp.ndarray, *, algo: str) -> SplitComplex:
+def _rfft_direct(x: jnp.ndarray, *, algo: str, backend: str = "jnp",
+                 radix: int = 4, block_batch: int = 8) -> SplitComplex:
     """rfft body with an explicitly resolved inner algo (no registry)."""
     n = x.shape[-1]
     assert n % 2 == 0, "rfft requires even length"
     h = n // 2
     z = SplitComplex(x[..., 0::2], x[..., 1::2])
-    zf = fft(z, algo=algo)                            # (..., h)
+    zf = _fft_inner(z, algo=algo, backend=backend, radix=radix,
+                    block_batch=block_batch)          # (..., h)
     # untangle: Xe[k] = (Z[k] + conj(Z[h-k]))/2 ; Xo[k] = -i(Z[k]-conj(Z[h-k]))/2
     idx = (-jnp.arange(h)) % h                        # Z[h-k] with wrap
     zr_f = jnp.take(zf.re, idx, axis=-1)
@@ -533,22 +564,22 @@ def _rfft_direct(x: jnp.ndarray, *, algo: str) -> SplitComplex:
 
 
 def irfft(xf: SplitComplex, n: Optional[int] = None, *,
-          algo: str = "auto") -> jnp.ndarray:
+          algo: str = "auto", backend: str = "jnp") -> jnp.ndarray:
     """Inverse real FFT from the (..., N/2+1) half spectrum.
 
-    An explicit even ``n`` truncates or zero-pads the spectrum to n/2+1
-    bins first (numpy semantics).  ``algo="auto"`` routes through the
-    registry's rfft-kind inverse key (the resolved algo is the
-    full-length inner complex ifft)."""
+    An explicit ``n`` truncates or zero-pads the spectrum to n//2+1 bins
+    first (numpy semantics; odd ``n`` is served by the direct Hermitian
+    extension — the registry's rfft keys cover even lengths only).
+    ``algo="auto"`` routes through the registry's rfft-kind inverse key
+    (the resolved algo is the full-length inner complex ifft)."""
     if n is None:
         n = 2 * (xf.shape[-1] - 1)
-    assert n % 2 == 0, f"irfft requires even output length, got {n}"
     xf = _fit_half_spectrum(xf, n)
-    if algo == "auto":
-        from . import plan as _plan
-        return _plan.get_plan((n,), dtype=xf.dtype, inverse=True,
-                              kind="rfft")(xf)
-    return _irfft_direct(xf, n, algo=algo)
+    if n % 2 or algo != "auto":
+        return _irfft_direct(xf, n, algo=algo, backend=backend)
+    from . import plan as _plan
+    return _plan.get_plan((n,), dtype=xf.dtype, inverse=True,
+                          kind="rfft", backend=backend)(xf)
 
 
 def _fit_half_spectrum(xf: SplitComplex, n: int) -> SplitComplex:
@@ -563,12 +594,17 @@ def _fit_half_spectrum(xf: SplitComplex, n: int) -> SplitComplex:
     return SplitComplex(jnp.pad(xf.re, pad), jnp.pad(xf.im, pad))
 
 
-def _irfft_direct(xf: SplitComplex, n: int, *, algo: str) -> jnp.ndarray:
-    # Hermitian-extend then complex ifft; take the real plane.
-    body_r = xf.re[..., 1:-1]
-    body_i = xf.im[..., 1:-1]
+def _irfft_direct(xf: SplitComplex, n: int, *, algo: str,
+                  backend: str = "jnp", radix: int = 4,
+                  block_batch: int = 8) -> jnp.ndarray:
+    # Hermitian-extend then complex ifft; take the real plane.  For even n
+    # the Nyquist bin (last) is excluded from the mirrored body; odd n has
+    # no Nyquist bin, so the body is every bin past DC (numpy semantics).
+    body_r = xf.re[..., 1:(n + 1) // 2]
+    body_i = xf.im[..., 1:(n + 1) // 2]
     full = SplitComplex(
         jnp.concatenate([xf.re, body_r[..., ::-1]], axis=-1),
         jnp.concatenate([xf.im, -body_i[..., ::-1]], axis=-1))
-    out = fft(full, inverse=True, algo=algo)
+    out = _fft_inner(full, inverse=True, algo=algo, backend=backend,
+                     radix=radix, block_batch=block_batch)
     return out.re

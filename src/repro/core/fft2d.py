@@ -86,57 +86,89 @@ def fft3(x: SplitComplex, *, inverse: bool = False,
     return _swap(y, -1, -3)
 
 
-def rfft2(x: jnp.ndarray, *, algo: str = "auto") -> SplitComplex:
+def rfft2(x: jnp.ndarray, *, algo: str = "auto",
+          backend: str = "jnp") -> SplitComplex:
     """Real-input 2-D FFT: rfft rows (half spectrum), full FFT columns.
 
     Beyond-paper: halves the row-pass FLOPs and — in the distributed
     version — the transpose all_to_all bytes.  ``algo="auto"`` routes
-    through the registry's rfft-kind (h, w) key: the row-pass inner algo
-    is resolved once per shape, and the column pass composes with the
-    (h,)-key c2c plan.
+    through the registry's rfft-kind (h, w) key: on ``backend="jnp"`` the
+    row-pass inner algo is resolved once per shape and the column pass
+    composes with the (h,)-key c2c plan; ``backend="pallas"`` selects the
+    fused real-input kernel (:mod:`repro.kernels.rfft2d_fused`) — one
+    kernel, half the complex fused kernel's HBM traffic — demoting to jnp
+    with a registry-visible reason when the shape has no kernel path.
     """
     if algo == "auto":
         from . import plan as _plan
-        return _plan.get_plan(x.shape[-2:], dtype=x.dtype, kind="rfft")(x)
-    return _rfft2_direct(x, row_algo=algo, col_algo=algo)
+        return _plan.get_plan(x.shape[-2:], dtype=x.dtype, kind="rfft",
+                              backend=backend)(x)
+    if algo == "fused":
+        if backend != "pallas":
+            raise ValueError('algo="fused" requires backend="pallas" '
+                             '(the fused rfft kernel has no jnp equivalent)')
+        from repro.kernels import ops as kops
+        return kops.rfft2d_fused(x)
+    return _rfft2_direct(x, row_algo=algo, col_algo=algo, backend=backend)
 
 
-def _rfft2_direct(x: jnp.ndarray, *, row_algo: str,
-                  col_algo: str = "auto") -> SplitComplex:
+def _rfft2_direct(x: jnp.ndarray, *, row_algo: str, col_algo: str = "auto",
+                  backend: str = "jnp") -> SplitComplex:
     """Execute a resolved rfft2 config.  ``row_algo`` is the inner complex
     algo of the packed row rfft (explicit, never "auto"); the column pass
     is an ordinary c2c transform that may route through its own plan key.
+    ``backend="pallas"`` runs both passes on the 1-D kernels where the
+    algo has one (:func:`repro.core.fft1d._fft_inner`).
     """
-    y = fft1d._rfft_direct(x, algo=row_algo)           # (..., H, W/2+1)
+    y = fft1d._rfft_direct(x, algo=row_algo,
+                           backend=backend)            # (..., H, W/2+1)
     y = _swap(y, -1, -2)
-    y = fft1d.fft(y, algo=col_algo)
+    y = fft1d._fft_inner(y, algo=col_algo, backend=backend)
     return _swap(y, -1, -2)
 
 
-def irfft2(xf: SplitComplex, s=None, *, algo: str = "auto") -> jnp.ndarray:
+def irfft2(xf: SplitComplex, s=None, *, algo: str = "auto",
+           backend: str = "jnp") -> jnp.ndarray:
     """Inverse real 2-D FFT from the (..., H, W/2+1) half spectrum.
 
     ``s=(h, w)`` follows ``numpy.fft.irfft2``: the spectrum is truncated or
-    trailing-zero-padded to h rows and w/2+1 bins, then transformed with an
-    output width of ``w`` (even, as everywhere in this repo).  The fit
-    happens before plan dispatch, so both algo paths — the registry's
-    rfft-kind (h, w) key and an explicit ``algo=`` — see the same spectrum.
+    trailing-zero-padded to h rows and w//2+1 bins, then transformed with
+    an output width of ``w``.  Odd widths follow numpy's odd-``s``
+    semantics on the direct (jnp) path — the registry's rfft keys and the
+    fused kernel cover even widths.  The fit happens before plan dispatch,
+    so every path sees the same spectrum.
     """
     if s is not None:
         h, w = (int(d) for d in s)
-        assert w % 2 == 0, f"irfft2 requires an even output width, got {s}"
+        if h < 1 or w < 1:
+            raise ValueError(f"irfft2 output shape must be positive, "
+                             f"got s={s}")
         xf = _fit_spectrum2(xf, h, w)
+    else:
+        w = 2 * (xf.shape[-1] - 1)
     h = xf.shape[-2]
-    w = 2 * (xf.shape[-1] - 1)
+    if w % 2:                     # odd width: numpy semantics, direct path
+        if algo == "fused":
+            raise ValueError(f"the fused rfft kernel needs an even output "
+                             f"width, got s={s}")
+        return _irfft2_direct(xf, row_algo=algo, col_algo=algo, w=w,
+                              backend=backend)
+    if algo == "fused":
+        if backend != "pallas":
+            raise ValueError('algo="fused" requires backend="pallas" '
+                             '(the fused rfft kernel has no jnp equivalent)')
+        from repro.kernels import ops as kops
+        return kops.irfft2d_fused(xf)
     if algo == "auto":
         from . import plan as _plan
         return _plan.get_plan((h, w), dtype=xf.dtype, inverse=True,
-                              kind="rfft")(xf)
-    return _irfft2_direct(xf, row_algo=algo, col_algo=algo)
+                              kind="rfft", backend=backend)(xf)
+    return _irfft2_direct(xf, row_algo=algo, col_algo=algo, w=w,
+                          backend=backend)
 
 
 def _fit_spectrum2(xf: SplitComplex, h: int, w: int) -> SplitComplex:
-    """Truncate / zero-pad a 2-D half spectrum to (h, w/2+1) — numpy's
+    """Truncate / zero-pad a 2-D half spectrum to (h, w//2+1) — numpy's
     ``ifft(a, n=h)`` trailing-fit on axis -2, then the 1-D half-spectrum
     fit on the last axis."""
     rows = xf.shape[-2]
@@ -149,9 +181,10 @@ def _fit_spectrum2(xf: SplitComplex, h: int, w: int) -> SplitComplex:
 
 
 def _irfft2_direct(xf: SplitComplex, *, row_algo: str,
-                   col_algo: str = "auto") -> jnp.ndarray:
+                   col_algo: str = "auto", w: int = None,
+                   backend: str = "jnp") -> jnp.ndarray:
     y = _swap(xf, -1, -2)
-    y = fft1d.fft(y, inverse=True, algo=col_algo)
+    y = fft1d._fft_inner(y, inverse=True, algo=col_algo, backend=backend)
     y = _swap(y, -1, -2)
-    n = 2 * (xf.shape[-1] - 1)
-    return fft1d._irfft_direct(y, n, algo=row_algo)
+    n = w if w is not None else 2 * (xf.shape[-1] - 1)
+    return fft1d._irfft_direct(y, n, algo=row_algo, backend=backend)

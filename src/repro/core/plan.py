@@ -27,10 +27,18 @@ ranks sanely (the heuristic default is always kept in the measured set).
 Plans with ``kind="rfft"`` cover the real-input transforms: the key
 includes the kind, so ``rfft``/``irfft``/``rfft2``/``irfft2`` resolve their
 inner complex algo once per shape instead of re-deriving it per call.
+Real-input plans have a kernel path too: 2-D rfft keys on
+``backend="pallas"`` resolve to the fused real-input kernel
+(:mod:`repro.kernels.rfft2d_fused`, ``algo="fused"``), 1-D rfft keys run
+their inner complex transform on the 1-D kernels, and shapes with no
+kernel path demote to jnp with the reason recorded on
+``FFTPlan.demote_reason``.  rfft-kind autotuning measures the
+(algo, backend, block_batch) grid — the jnp schedule is always a
+candidate, so tuning can cross backends.
 
 Tuned winners persist across processes FFTW-"wisdom" style:
 :func:`save_wisdom` / :func:`load_wisdom` round-trip the registry's tuned
-(algo, radix, block_batch) entries as versioned, key-hashed JSON.
+(algo, radix, block_batch, backend) entries as versioned, key-hashed JSON.
 """
 from __future__ import annotations
 
@@ -47,7 +55,7 @@ import numpy as np
 
 from .complexmath import SplitComplex
 from . import fft1d
-from .fft1d import resolve_algo
+from .fft1d import KERNEL_INNER_ALGOS, resolve_algo
 
 
 def _is_pow2(n: int) -> bool:
@@ -80,6 +88,7 @@ class FFTPlan:
     kind: str = "c2c"                 # "c2c" | "rfft" (real input/output)
     tuned: bool = False
     tune_report: Optional[dict] = None   # {candidate label: us} when tuned
+    demote_reason: Optional[str] = None  # why a pallas request fell to jnp
 
     # -- introspection -------------------------------------------------------
 
@@ -125,25 +134,44 @@ class FFTPlan:
         return fft1d.fft(x, inverse=self.inverse, algo=algo)
 
     def _call_rfft(self, x):
-        """Execute a real-input plan: the resolved ``algo`` is the *inner*
-        complex transform of the rfft/irfft axis, passed explicitly so the
-        dispatch decision baked into this plan is never re-derived.  The
-        2-D column pass is a c2c transform with its own registry key and is
-        routed through it (``algo="auto"``), FFTW-style plan composition.
+        """Execute a real-input plan.  On ``backend="jnp"`` the resolved
+        ``algo`` is the *inner* complex transform of the rfft/irfft axis,
+        passed explicitly so the dispatch decision baked into this plan is
+        never re-derived, and the 2-D column pass is a c2c transform routed
+        through its own registry key (``algo="auto"``), FFTW-style plan
+        composition.  On ``backend="pallas"`` 2-D plans run the fused
+        real-input kernel (``algo="fused"``) and 1-D plans run their inner
+        complex transform on the 1-D kernels.
         """
         if self.ndim == 1:
+            kw = dict(algo=self.algo, backend=self.backend,
+                      radix=self.radix, block_batch=self.block_batch)
             if self.inverse:            # input: (..., n/2+1) half spectrum
                 assert x.shape[-1] == self.n // 2 + 1, (x.shape, self.shape)
-                return fft1d._irfft_direct(x, self.n, algo=self.algo)
+                return fft1d._irfft_direct(x, self.n, **kw)
             assert x.shape[-1] == self.n, (x.shape, self.shape)
-            return fft1d._rfft_direct(x, algo=self.algo)
-        from . import fft2d
+            return fft1d._rfft_direct(x, **kw)
         h, w = self.shape
+        from . import fft2d
+        if self.backend == "pallas" and self.algo == "fused":
+            from repro.kernels import ops as kops
+            if self.inverse:
+                assert x.shape[-2:] == (h, w // 2 + 1), (x.shape, self.shape)
+                return kops.irfft2d_fused(x, block_batch=self.block_batch)
+            assert x.shape[-2:] == (h, w), (x.shape, self.shape)
+            return kops.rfft2d_fused(x, block_batch=self.block_batch)
+        # jnp plans run the row-column schedule with jnp passes; a pallas
+        # plan with an explicit non-fused algo runs the SAME schedule with
+        # kernel 1-D passes — identical to the direct rfft2()/irfft2()
+        # path for the same (algo, backend) request
+        col = self.algo if self.backend == "pallas" else "auto"
         if self.inverse:
             assert x.shape[-2:] == (h, w // 2 + 1), (x.shape, self.shape)
-            return fft2d._irfft2_direct(x, row_algo=self.algo)
+            return fft2d._irfft2_direct(x, row_algo=self.algo, col_algo=col,
+                                        backend=self.backend)
         assert x.shape[-2:] == (h, w), (x.shape, self.shape)
-        return fft2d._rfft2_direct(x, row_algo=self.algo)
+        return fft2d._rfft2_direct(x, row_algo=self.algo, col_algo=col,
+                                   backend=self.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -168,8 +196,12 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     batch-dependent.
 
     ``kind="rfft"`` interns a real-input plan: ``shape`` is the *real*
-    shape, and the resolved algo is the inner complex transform of the
-    rfft/irfft axis (length n/2 forward, n inverse).
+    shape.  On ``backend="jnp"`` the resolved algo is the inner complex
+    transform of the rfft/irfft axis (length n/2 forward, n inverse); on
+    ``backend="pallas"`` 2-D shapes resolve to the fused real-input kernel
+    (``algo="fused"``) and 1-D shapes run the inner transform on the 1-D
+    kernels.  Shapes with no kernel path demote to jnp and record why in
+    ``FFTPlan.demote_reason``.
 
     ``prune="model"`` makes the autotuner rank candidates with the
     :mod:`repro.tt.trace` cost model on ``model_arch`` and measure only the
@@ -185,24 +217,65 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     kernel_ok = all(_is_pow2(d) and d >= 2 for d in shape)
     radix = 4
     fixed_radix = False
+    demote = None
 
     if kind == "rfft":
         n = shape[-1]
-        assert n % 2 == 0, f"rfft plans need an even last dim, got {shape}"
-        backend = "jnp"          # the rfft pack/untangle has no kernel path
+        if n % 2:
+            raise ValueError(f"rfft plans need an even last dim, "
+                             f"got {shape}")
         inner = n if inverse else n // 2
-        resolved = resolve_algo(inner) if algo == "auto" else algo
-        block_batch = 8
+        if len(shape) == 1:
+            # 1-D: the pack/untangle stays jnp; the inner complex
+            # transform runs on the 1-D kernels when one exists
+            resolved = resolve_algo(inner) if algo == "auto" else algo
+            if backend == "pallas" and (
+                    resolved not in KERNEL_INNER_ALGOS
+                    or not (_is_pow2(inner) and inner >= 2)):
+                demote = (f"inner algo {resolved!r} at inner length "
+                          f"{inner} has no kernel path")
+                backend = "jnp"
+            block_batch = 8
+        else:
+            # 2-D: the fused real-input kernel (rfft2d_fused)
+            if backend == "pallas" and not kernel_ok:
+                demote = ("fused rfft kernel needs power-of-two dims "
+                          f">= 2, got {shape}")
+                if algo == "fused":
+                    algo = "auto"
+                backend = "jnp"
+            if algo == "auto":
+                resolved = "fused" if backend == "pallas" \
+                    else resolve_algo(inner)
+            else:
+                resolved = algo
+            if backend == "pallas" and resolved != "fused" and (
+                    resolved not in KERNEL_INNER_ALGOS
+                    or not (_is_pow2(inner) and inner >= 2)):
+                # an explicit non-fused algo runs the row-column schedule
+                # with kernel 1-D passes (same as the direct rfft2 path);
+                # algos outside _fft_inner's kernel set demote visibly
+                demote = (f"explicit inner algo {resolved!r} at inner "
+                          f"length {inner} has no kernel path")
+                backend = "jnp"
+            if backend == "jnp" and resolved == "fused":
+                raise ValueError('algo="fused" requires backend="pallas" '
+                                 '(the fused rfft kernel has no jnp '
+                                 'equivalent)')
+            block_batch = 1 if resolved == "fused" else 8
     elif len(shape) == 1:
         resolved = resolve_algo(shape[0]) if algo == "auto" else algo
         if resolved == "stockham2":   # radix-2 oracle: a stockham radix config
             resolved, radix, fixed_radix = "stockham", 2, True
         if backend == "pallas" and (resolved in ("naive", "bluestein")
                                     or not kernel_ok):
-            backend = "jnp"           # no kernel for these paths
+            demote = f"algo {resolved!r} at {shape} has no kernel path"
+            backend = "jnp"
         block_batch = 8
     else:
         if backend == "pallas" and not kernel_ok:
+            demote = ("kernels need power-of-two tile dims >= 2, "
+                      f"got {shape}")
             if algo == "fused":
                 algo = "auto"         # fused demotes with its backend
             backend = "jnp"
@@ -227,7 +300,8 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     if plan is None:
         plan = FFTPlan(shape=shape, dtype=key[1], inverse=inverse,
                        algo=resolved, radix=radix, backend=backend,
-                       block_batch=block_batch, kind=kind)
+                       block_batch=block_batch, kind=kind,
+                       demote_reason=demote)
         cache[cache_key] = plan
     if tune and not plan.tuned:
         plan = _autotune(cache_key, plan, batch=tune_batch,
@@ -261,7 +335,12 @@ def autotune_count(shape, *, dtype=jnp.float32, inverse: bool = False,
 # Wisdom (FFTW-style persisted plans)
 # ---------------------------------------------------------------------------
 
-WISDOM_VERSION = 1
+# v2: entries carry the tuned *backend* (rfft-kind keys autotune across
+# backends since the fused rfft kernel landed).  v1 files were written
+# when rfft keys were hard-pinned to backend="jnp"; loading one would
+# silently resurrect "jnp" as the tuned winner for keys that now have a
+# kernel path, so the version guard rejects them outright.
+WISDOM_VERSION = 2
 
 
 def _wisdom_key_str(key: PlanKey) -> str:
@@ -276,11 +355,12 @@ def _wisdom_key_parse(s: str) -> PlanKey:
             bool(int(parts["inverse"])), parts["backend"], parts["kind"])
 
 
-def _wisdom_hash(key_str: str, algo, radix, block_batch) -> str:
+def _wisdom_hash(key_str: str, algo, radix, block_batch, backend) -> str:
     """Guard hash over the version, the key AND the tuned values, so a
-    stale or hand-edited entry (wrong algo for the shape, typo'd radix)
-    cannot install a bogus tuned plan."""
-    payload = f"v{WISDOM_VERSION}:{key_str}:{algo}:{radix}:{block_batch}"
+    stale or hand-edited entry (wrong algo for the shape, typo'd radix,
+    swapped backend) cannot install a bogus tuned plan."""
+    payload = (f"v{WISDOM_VERSION}:{key_str}:{algo}:{radix}:{block_batch}"
+               f":{backend}")
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
@@ -298,9 +378,12 @@ def save_wisdom(path: str) -> int:
         entries.append({
             "key": ks,
             "key_hash": _wisdom_hash(ks, plan.algo, plan.radix,
-                                     plan.block_batch),
+                                     plan.block_batch, plan.backend),
             "algo": plan.algo, "radix": plan.radix,
             "block_batch": plan.block_batch,
+            # the *tuned* backend: a pallas key's winner may be the jnp
+            # schedule (and the key records the requested backend)
+            "backend": plan.backend,
             "tune_report": plan.tune_report,
         })
     with open(path, "w") as fh:
@@ -334,7 +417,9 @@ def load_wisdom(path: str, *, strict: bool = False) -> int:
             algo = e["algo"]
             radix = int(e["radix"])
             block_batch = int(e["block_batch"])
-            if _wisdom_hash(ks, algo, radix, block_batch) != e["key_hash"]:
+            backend = e["backend"]
+            if _wisdom_hash(ks, algo, radix, block_batch,
+                            backend) != e["key_hash"]:
                 raise ValueError(f"wisdom key-hash mismatch for {ks!r}")
             key = _wisdom_key_parse(ks)
         except (KeyError, ValueError, TypeError) as ex:
@@ -349,7 +434,7 @@ def load_wisdom(path: str, *, strict: bool = False) -> int:
         report.setdefault("winner", "wisdom")
         report["source"] = "wisdom"
         _PLAN_CACHE[key] = FFTPlan(
-            shape=key[0], dtype=key[1], inverse=key[2], backend=key[3],
+            shape=key[0], dtype=key[1], inverse=key[2], backend=backend,
             kind=key[4], algo=algo, radix=radix,
             block_batch=block_batch, tuned=True, tune_report=report)
         loaded += 1
@@ -417,9 +502,37 @@ def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
     base = dataclasses.replace
     out = [("default", plan)]
     if plan.kind == "rfft":
-        # the rfft pack/untangle wraps an inner c2c transform whose own key
-        # is tuned independently; nothing plan-level to vary here
-        return out
+        if plan.backend != "pallas":
+            # jnp rfft wraps an inner c2c transform whose own key is tuned
+            # independently; nothing plan-level to vary here
+            return out
+        # pallas rfft keys tune over (algo, backend, block_batch): the
+        # kernel variants plus the jnp schedule as the cross-backend
+        # baseline — tuning may conclude the kernel does not pay here
+        inner = plan.n if plan.inverse else plan.n // 2
+        if plan.ndim == 2:
+            for bb in sorted({min(b, batch) for b in (1, 2)}):
+                out.append((f"fused/bb{bb}",
+                            base(plan, algo="fused", block_batch=bb)))
+        else:
+            for bb in sorted({min(b, batch) for b in (4, 8, 16)}):
+                out.append((f"stockham/r4/bb{bb}",
+                            base(plan, algo="stockham", radix=4,
+                                 block_batch=bb)))
+            bb4s = min(4, batch)
+            out.append((f"four_step/bb{bb4s}",
+                        base(plan, algo="four_step", block_batch=bb4s)))
+        out.append(("jnp", base(plan, backend="jnp",
+                                algo=resolve_algo(inner), block_batch=8)))
+        if fixed_algo:
+            out = [(lbl, c) for lbl, c in out if c.algo == plan.algo]
+        seen, uniq = set(), []
+        for lbl, c in out:
+            cfg = (c.algo, c.radix, c.block_batch, c.backend)
+            if cfg not in seen:
+                seen.add(cfg)
+                uniq.append((lbl, c))
+        return uniq
     if plan.ndim == 1:
         n = plan.n
         if not _is_pow2(n):
@@ -469,9 +582,14 @@ def _model_prune(cands, *, batch: int, prune_k: Optional[int],
 
     The heuristic default (candidate 0) is always kept, so pruning can
     only *add* model-favoured configs to the measured set, never remove
-    the config the registry would have used untuned.  Candidates whose
-    working set busts the arch's SRAM budget rank last (predict_cost is
-    +inf for them).  Returns (kept, pruned_labels).
+    the config the registry would have used untuned.  Candidates on a
+    *different backend* than the default are also always kept: the model
+    is an intra-backend ranker, and the cross-backend wall-clock question
+    (interpret-mode overhead vs XLA batch amortisation) is exactly what
+    it cannot see — pruning the jnp schedule from an rfft pallas key
+    would install a measurably slower winner at small sizes.  Candidates
+    whose working set busts the arch's SRAM budget rank last
+    (predict_cost is +inf for them).  Returns (kept, pruned_labels).
     """
     if len(cands) <= 2:
         return cands, []
@@ -480,10 +598,14 @@ def _model_prune(cands, *, batch: int, prune_k: Optional[int],
     k = max(2, min(k, len(cands)))
     if k >= len(cands):
         return cands, []
+    base_backend = cands[0][1].backend
+    forced = [i for i in range(1, len(cands))
+              if cands[i][1].backend != base_backend]
     costs = [predict_cost(c, arch=model_arch, batch=batch)
              for _, c in cands]
-    rest = sorted(range(1, len(cands)), key=costs.__getitem__)
-    keep_idx = sorted([0] + rest[:k - 1])
+    rest = sorted((i for i in range(1, len(cands)) if i not in forced),
+                  key=costs.__getitem__)
+    keep_idx = sorted(set([0] + forced + rest[:max(0, k - 1 - len(forced))]))
     kept = [cands[i] for i in keep_idx]
     pruned = [cands[i][0] for i in range(len(cands)) if i not in keep_idx]
     return kept, pruned

@@ -296,7 +296,8 @@ def prfft2(x: jnp.ndarray, mesh, axis: str = "data", *,
     Schedule per device (p = mesh size along ``axis``):
 
     1. local row rfft via the plan registry's ``kind="rfft"`` entries
-       ((H/p, W) real -> (H/p, W/2+1) half spectra, half the row FLOPs);
+       ((H/p, W) real -> (H/p, W/2+1) half spectra, half the row FLOPs;
+       ``backend="pallas"`` runs the inner transform on the 1-D kernels);
     2. pack: Nyquist bin into the DC bin's imaginary plane -> (H/p, W/2);
     3. all_to_all of the W/2 packed pencils — **half** of :func:`pfft2`'s
        exchange bytes — to (H, W/(2p));

@@ -3,5 +3,7 @@
 fft_stockham — VMEM-resident autosort FFT (all stages, zero reorders)
 fft_fourstep — MXU DFT-matmul four-step FFT
 fft_stage    — paper-faithful per-stage butterfly chain (baseline)
+fft2d_fused  — fused transpose-free 2-D FFT (row/transpose/column in VMEM)
+rfft2d_fused — fused real-input 2-D FFT (row-pair packing, half spectrum)
 ops          — jit'd wrappers; ref — jnp.fft oracles
 """

@@ -17,6 +17,7 @@ from . import fft_stockham as _stockham
 from . import fft_fourstep as _fourstep
 from . import fft_stage as _stage
 from . import fft2d_fused as _fused2d
+from . import rfft2d_fused as _rfused2d
 
 
 def _on_tpu() -> bool:
@@ -71,6 +72,16 @@ def _flatten2d(x: SplitComplex):
                         x.im.reshape(batch, h, w)), lead
 
 
+def _pad_batch2d(arrs, batch: int, block_batch: int):
+    """Pad flattened (batch, h, w) component planes up to the block size.
+    Callers guard ``batch > 0`` (an empty batch has nothing to kernel)."""
+    bb = min(block_batch, batch)
+    pad = (-batch) % bb
+    if pad:
+        arrs = [jnp.pad(a, ((0, pad), (0, 0), (0, 0))) for a in arrs]
+    return arrs, bb
+
+
 @functools.partial(jax.jit, static_argnames=("inverse", "block_batch",
                                              "interpret"))
 def fft2d_fused(x: SplitComplex, *, inverse: bool = False,
@@ -82,16 +93,61 @@ def fft2d_fused(x: SplitComplex, *, inverse: bool = False,
     flat, lead = _flatten2d(x)
     h, w = flat.shape[-2:]
     batch = flat.shape[0]
-    bb = min(block_batch, batch)
-    pad = (-batch) % bb
-    if pad:
-        flat = SplitComplex(jnp.pad(flat.re, ((0, pad), (0, 0), (0, 0))),
-                            jnp.pad(flat.im, ((0, pad), (0, 0), (0, 0))))
-    out = _fused2d.fft2d_fused_pallas(flat, inverse=inverse,
+    if batch == 0:
+        return x                       # empty batch: nothing to transform
+    (re, im), bb = _pad_batch2d([flat.re, flat.im], batch, block_batch)
+    out = _fused2d.fft2d_fused_pallas(SplitComplex(re, im), inverse=inverse,
                                       block_batch=bb, interpret=interpret)
     out = SplitComplex(out.re[:batch], out.im[:batch])
     return SplitComplex(out.re.reshape(*lead, h, w),
                         out.im.reshape(*lead, h, w))
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def rfft2d_fused(x: jnp.ndarray, *, block_batch: int = 1,
+                 interpret: bool = None) -> SplitComplex:
+    """Fused real-input 2-D FFT over the last two axes (any leading batch
+    dims): real (..., h, w) -> (..., h, w//2+1) half spectra; see
+    :mod:`repro.kernels.rfft2d_fused`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    h, w = x.shape[-2:]
+    lead = x.shape[:-2]
+    batch = 1
+    for d in lead:
+        batch *= d
+    if batch == 0:
+        empty = jnp.zeros((*lead, h, w // 2 + 1), x.dtype)
+        return SplitComplex(empty, empty)
+    (flat,), bb = _pad_batch2d([x.reshape(batch, h, w)], batch, block_batch)
+    out = _rfused2d.rfft2d_fused_pallas(flat, block_batch=bb,
+                                        interpret=interpret)
+    return SplitComplex(out.re[:batch].reshape(*lead, h, w // 2 + 1),
+                        out.im[:batch].reshape(*lead, h, w // 2 + 1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def irfft2d_fused(xf: SplitComplex, *, block_batch: int = 1,
+                  interpret: bool = None) -> jnp.ndarray:
+    """Inverse twin of :func:`rfft2d_fused`: (..., h, w/2+1) half spectra ->
+    real (..., h, w)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    h, bins = xf.shape[-2:]
+    w = 2 * (bins - 1)
+    lead = xf.shape[:-2]
+    batch = 1
+    for d in lead:
+        batch *= d
+    if batch == 0:
+        return jnp.zeros((*lead, h, w), xf.dtype)
+    (re, im), bb = _pad_batch2d([xf.re.reshape(batch, h, bins),
+                                 xf.im.reshape(batch, h, bins)],
+                                batch, block_batch)
+    out = _rfused2d.irfft2d_fused_pallas(SplitComplex(re, im),
+                                         block_batch=bb,
+                                         interpret=interpret)
+    return out[:batch].reshape(*lead, h, w)
 
 
 @functools.partial(jax.jit, static_argnames=("inverse", "block_batch", "n1",

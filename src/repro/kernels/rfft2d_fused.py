@@ -1,0 +1,255 @@
+"""Fused real-input 2-D FFT Pallas kernel (rfft2 / irfft2).
+
+The complex fused kernel (:mod:`repro.kernels.fft2d_fused`) already keeps
+the §5 global transpose off HBM; this kernel additionally exploits the
+input being *real*, which halves both FLOPs and HBM plane traffic:
+
+- **Row-pair packing** — rows ``2j`` and ``2j+1`` of the real (H, W) tile
+  become the re/im planes of ONE complex row, so the row pass runs H/2
+  complex FFTs of length W instead of H (the classic two-real-FFTs-in-one
+  trick).
+- **Hermitian untangle in-VMEM** — the packed spectra split back into the
+  two rows' half spectra ``A = (Z[k] + conj(Z[-k]))/2`` and
+  ``B = -i (Z[k] - conj(Z[-k]))/2`` for k = 0..W/2, never materialising
+  the redundant half.
+- **Half-width column pass** — the column FFT runs on the (H, W/2+1) half
+  spectrum as a *left-side* DFT contraction along the H axis, so the tile
+  transpose the row-column schedule pays for is absorbed into the matmul
+  operand order and never round-trips anywhere (not even inside VMEM).
+
+Both 1-D passes are one level of Bailey four-step — dense DFT-matrix
+matmuls (MXU work on TPU, fast GEMMs under interpret mode on CPU) with a
+pointwise inter-factor twiddle — fed by host-built tables passed as kernel
+operands: ``n = n1 * n2`` with ``n1 = 1`` (a single dense DFT) below the
+leaf size.  Per image the kernel moves one real plane in and one half
+spectrum out: ~half the complex fused kernel's HBM traffic, and the VMEM
+working set is the half-width tile (the 1024x1024 fp32 case fits the
+16 MiB v5e budget that the complex kernel busts — see
+:func:`repro.tt.trace.trace_plan`).
+
+The inverse twin repacks the half spectra (Hermitian extension of each
+row pair into one complex row), runs the inverse column and row passes,
+and writes the real plane; ``s=`` truncate/pad fits happen upstream in
+:func:`repro.core.fft2d.irfft2`, which hands this kernel an already
+fitted spectrum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.complexmath import SplitComplex
+from repro.core.fft1d import _best_split
+
+# below this length a single dense DFT matmul beats the four-step's extra
+# twiddle/reshape traffic (mirrors resolve_algo's naive-leaf region)
+FOURSTEP_LEAF = 256
+
+
+def fourstep_factors(n: int):
+    """(n1, n2) with n = n1 * n2: the one-level four-step split used by the
+    kernel (and mirrored by the :mod:`repro.tt.trace` cost model).  n1 == 1
+    means a single dense DFT matmul."""
+    n1 = 1 if n <= FOURSTEP_LEAF else _best_split(n)
+    return n1, n // n1
+
+
+def fourstep_tables_np(n: int, inverse: bool):
+    """Host-built float64 tables for one four-step pass of length n, cast
+    by the caller: DFT matrices for both factors plus the inter-factor
+    twiddle ``T[k1, j2] = exp(sign * 2*pi*i * k1*j2 / n)`` — composed from
+    the (lru-cached) builders in :mod:`repro.core.twiddle`.  No 1/n
+    scaling — the inverse kernels fold one 1/(H*W) at the end."""
+    from repro.core.twiddle import _dft_matrix_np, _fourstep_twiddle_np
+    n1, n2 = fourstep_factors(n)
+    sign = 1.0 if inverse else -1.0
+    w1r, w1i = _dft_matrix_np(n1, sign)
+    w2r, w2i = _dft_matrix_np(n2, sign)
+    twr, twi = _fourstep_twiddle_np(n1, n2, sign)
+    return (w1r, w1i, w2r, w2i, twr, twi)
+
+
+def fft_last_fourstep(re, im, tabs, n1: int, n2: int):
+    """Length-(n1*n2) FFT of the last axis via one four-step level.
+
+    The n1-factor DFT contracts along axis -2 as a *left* multiply
+    (einsum), so no transpose is materialised for it; only the four-step
+    output reordering transposes the two small factor axes.
+    """
+    w1r, w1i, w2r, w2i, twr, twi = tabs
+    b = re.shape[:-1]
+    re = re.reshape(*b, n1, n2)
+    im = im.reshape(*b, n1, n2)
+    if n1 > 1:
+        yr = jnp.einsum("ka,...an->...kn", w1r, re) \
+            - jnp.einsum("ka,...an->...kn", w1i, im)
+        yi = jnp.einsum("ka,...an->...kn", w1i, re) \
+            + jnp.einsum("ka,...an->...kn", w1r, im)
+        re, im = yr * twr - yi * twi, yr * twi + yi * twr
+    zr = re @ w2r - im @ w2i
+    zi = re @ w2i + im @ w2r
+    # output ordering X[k2*n1 + k1] = Z[k1, k2]
+    zr = jnp.swapaxes(zr, -1, -2).reshape(*b, n1 * n2)
+    zi = jnp.swapaxes(zi, -1, -2).reshape(*b, n1 * n2)
+    return zr, zi
+
+
+def fft_col_fourstep(re, im, tabs, n1: int, n2: int):
+    """Length-(n1*n2) FFT along axis -2 of an (..., H, C) tile — the column
+    pass — as left-side DFT contractions, absorbing the tile transpose."""
+    w1r, w1i, w2r, w2i, twr, twi = tabs
+    b = re.shape[:-2]
+    c = re.shape[-1]
+    re = re.reshape(*b, n1, n2, c)
+    im = im.reshape(*b, n1, n2, c)
+    if n1 > 1:
+        yr = jnp.einsum("ka,...anc->...knc", w1r, re) \
+            - jnp.einsum("ka,...anc->...knc", w1i, im)
+        yi = jnp.einsum("ka,...anc->...knc", w1i, re) \
+            + jnp.einsum("ka,...anc->...knc", w1r, im)
+        twr = twr[..., None]
+        twi = twi[..., None]
+        re, im = yr * twr - yi * twi, yr * twi + yi * twr
+    zr = jnp.einsum("kb,...nbc->...nkc", w2r, re) \
+        - jnp.einsum("kb,...nbc->...nkc", w2i, im)
+    zi = jnp.einsum("kb,...nbc->...nkc", w2i, re) \
+        + jnp.einsum("kb,...nbc->...nkc", w2r, im)
+    zr = jnp.swapaxes(zr, -3, -2).reshape(*b, n1 * n2, c)
+    zi = jnp.swapaxes(zi, -3, -2).reshape(*b, n1 * n2, c)
+    return zr, zi
+
+
+def _conj_rev(x):
+    """x[(W-k) % W] for k = 0..W/2 on a length-W last axis (the conj(Z[-k])
+    gather of the Hermitian untangle, built from a flip — no gather op)."""
+    h = x.shape[-1] // 2
+    return jnp.concatenate([x[..., :1], jnp.flip(x[..., h:], -1)], -1)
+
+
+def _rfft2d_kernel(w1rw, w1iw, w2rw, w2iw, twrw, twiw,
+                   w1rh, w1ih, w2rh, w2ih, twrh, twih,
+                   x_ref, ore_ref, oim_ref, *,
+                   h: int, w: int, n1w: int, n2w: int, n1h: int, n2h: int):
+    """One batch tile: packed row FFT, Hermitian untangle, half-width
+    column FFT — all VMEM-resident."""
+    x = x_ref[...]                               # (bb, h, w) real
+    re = x[:, 0::2, :]                           # row pairs -> one complex
+    im = x[:, 1::2, :]                           # row: (bb, h/2, w)
+    tw_w = (w1rw[...], w1iw[...], w2rw[...], w2iw[...], twrw[...], twiw[...])
+    re, im = fft_last_fourstep(re, im, tw_w, n1w, n2w)
+    # untangle Z -> A (even rows), B (odd rows), bins k = 0..w/2
+    hw = w // 2
+    cr, ci = _conj_rev(re), _conj_rev(im)
+    rk, ik = re[..., :hw + 1], im[..., :hw + 1]
+    ar, ai = (rk + cr) * 0.5, (ik - ci) * 0.5
+    br, bi = (ik + ci) * 0.5, (cr - rk) * 0.5
+    bb = x.shape[0]
+    re2 = jnp.stack([ar, br], 2).reshape(bb, h, hw + 1)
+    im2 = jnp.stack([ai, bi], 2).reshape(bb, h, hw + 1)
+    # column FFT on the half-width tile (transpose absorbed into the
+    # left-side contraction)
+    tw_h = (w1rh[...], w1ih[...], w2rh[...], w2ih[...], twrh[...], twih[...])
+    re2, im2 = fft_col_fourstep(re2, im2, tw_h, n1h, n2h)
+    ore_ref[...] = re2
+    oim_ref[...] = im2
+
+
+def _irfft2d_kernel(w1rw, w1iw, w2rw, w2iw, twrw, twiw,
+                    w1rh, w1ih, w2rh, w2ih, twrh, twih,
+                    xre_ref, xim_ref, o_ref, *,
+                    h: int, w: int, n1w: int, n2w: int, n1h: int, n2h: int):
+    """Inverse twin: inverse column FFT, row-pair repack (Hermitian
+    extension), inverse row FFT, write the real plane."""
+    re = xre_ref[...]                            # (bb, h, w/2+1)
+    im = xim_ref[...]
+    tw_h = (w1rh[...], w1ih[...], w2rh[...], w2ih[...], twrh[...], twih[...])
+    re, im = fft_col_fourstep(re, im, tw_h, n1h, n2h)
+    # repack: rows 2j/2j+1's half spectra A/B -> Z = A_ext + i * B_ext.
+    # The C2R convention (numpy, and the jnp path's trailing .re) ignores
+    # the imaginary parts of the DC and Nyquist bins; here they MUST be
+    # zeroed explicitly — a complex Nyquist (e.g. after an s= width
+    # truncation) would otherwise leak row 2j+1's residue into row 2j.
+    hw = w // 2
+    ar, ai = re[:, 0::2, :], im[:, 0::2, :]      # (bb, h/2, w/2+1)
+    br, bi = re[:, 1::2, :], im[:, 1::2, :]
+    z0 = jnp.zeros_like(ai[..., :1])
+    drop_ends = lambda q: jnp.concatenate([z0, q[..., 1:hw], z0], -1)
+    ai, bi = drop_ends(ai), drop_ends(bi)
+    ext = lambda q, s: jnp.concatenate(
+        [q, s * jnp.flip(q[..., 1:hw], -1)], -1)  # Hermitian-extend to w
+    zr = ext(ar, 1.0) - ext(bi, -1.0)
+    zi = ext(ai, -1.0) + ext(br, 1.0)
+    tw_w = (w1rw[...], w1iw[...], w2rw[...], w2iw[...], twrw[...], twiw[...])
+    zr, zi = fft_last_fourstep(zr, zi, tw_w, n1w, n2w)
+    bb = re.shape[0]
+    out = jnp.stack([zr, zi], 2).reshape(bb, h, w)   # re -> 2j, im -> 2j+1
+    o_ref[...] = out * jnp.asarray(1.0 / (h * w), out.dtype)
+
+
+def _tables(h: int, w: int, inverse: bool, dtype):
+    tabs_w = fourstep_tables_np(w, inverse)
+    tabs_h = fourstep_tables_np(h, inverse)
+    return [jnp.asarray(t, dtype) for t in tabs_w + tabs_h]
+
+
+def _check_dims(h: int, w: int):
+    for d in (h, w):
+        if d & (d - 1) or d < 2:
+            raise ValueError("the fused rfft kernel needs power-of-two "
+                             f"tile dims >= 2, got {(h, w)}")
+
+
+def rfft2d_fused_pallas(x: jnp.ndarray, *, block_batch: int = 1,
+                        interpret: bool = True) -> SplitComplex:
+    """Batched real 2-D FFT: x of (batch, h, w) real -> (batch, h, w/2+1)
+    half spectra."""
+    batch, h, w = x.shape
+    _check_dims(h, w)
+    bb = min(block_batch, batch)
+    assert batch % bb == 0, (batch, bb)
+    ops = _tables(h, w, False, x.dtype)
+    n1w, n2w = fourstep_factors(w)
+    n1h, n2h = fourstep_factors(h)
+    kernel = functools.partial(_rfft2d_kernel, h=h, w=w, n1w=n1w, n2w=n2w,
+                               n1h=n1h, n2h=n2h)
+    grid = (batch // bb,)
+    in_spec = pl.BlockSpec((bb, h, w), lambda i: (i, 0, 0))
+    out_spec = pl.BlockSpec((bb, h, w // 2 + 1), lambda i: (i, 0, 0))
+    tspecs = [pl.BlockSpec(t.shape, lambda i, nd=t.ndim: (0,) * nd)
+              for t in ops]
+    out_shape = [jax.ShapeDtypeStruct((batch, h, w // 2 + 1), x.dtype)] * 2
+    ore, oim = pl.pallas_call(
+        kernel, grid=grid, in_specs=tspecs + [in_spec],
+        out_specs=[out_spec, out_spec], out_shape=out_shape,
+        interpret=interpret)(*ops, x)
+    return SplitComplex(ore, oim)
+
+
+def irfft2d_fused_pallas(xf: SplitComplex, *, block_batch: int = 1,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Batched inverse real 2-D FFT: (batch, h, w/2+1) half spectra ->
+    (batch, h, w) real, w = 2 * (bins - 1)."""
+    batch, h, bins = xf.re.shape
+    w = 2 * (bins - 1)
+    _check_dims(h, w)
+    bb = min(block_batch, batch)
+    assert batch % bb == 0, (batch, bb)
+    ops = _tables(h, w, True, xf.dtype)
+    n1w, n2w = fourstep_factors(w)
+    n1h, n2h = fourstep_factors(h)
+    kernel = functools.partial(_irfft2d_kernel, h=h, w=w, n1w=n1w, n2w=n2w,
+                               n1h=n1h, n2h=n2h)
+    grid = (batch // bb,)
+    in_spec = pl.BlockSpec((bb, h, bins), lambda i: (i, 0, 0))
+    out_spec = pl.BlockSpec((bb, h, w), lambda i: (i, 0, 0))
+    tspecs = [pl.BlockSpec(t.shape, lambda i, nd=t.ndim: (0,) * nd)
+              for t in ops]
+    out = pl.pallas_call(
+        kernel, grid=grid, in_specs=tspecs + [in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, h, w), xf.dtype),
+        interpret=interpret)(*ops, xf.re, xf.im)
+    return out

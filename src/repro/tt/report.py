@@ -26,41 +26,46 @@ from .arch import get_arch
 from . import trace as tttrace
 
 
-def _model_row_seconds(arch, size: int) -> "tttrace.PlanTrace":
-    """Model trace of one (size, size) f32 2-D FFT on ``arch``: the fused
-    single-kernel schedule on accelerators, row-column on CPUs."""
-    import dataclasses
+def _model_row_seconds(arch, size: int,
+                       transform: str = "fft2") -> "tttrace.PlanTrace":
+    """Model trace of one (size, size) f32 2-D transform on ``arch``: the
+    fused single-kernel schedule on accelerators, row-column on CPUs.
+    ``transform="rfft2"`` traces the real-input schedule instead (the
+    fused rfft kernel / the jnp rfft row-column path)."""
+    from repro.core.plan import FFTPlan
 
-    @dataclasses.dataclass(frozen=True)
-    class _Cfg:
-        shape: tuple
-        algo: str
-        radix: int = 4
-        block_batch: int = 1
-        backend: str = "pallas"
-        kind: str = "c2c"
-
+    assert transform in ("fft2", "rfft2"), transform
     a = get_arch(arch)
+    kind = "rfft" if transform == "rfft2" else "c2c"
     if a.kind == "cpu":
-        cfg = _Cfg(shape=(size, size), algo="row_col", block_batch=8,
-                   backend="jnp")
+        from repro.core.fft1d import resolve_algo
+        algo = resolve_algo(size // 2) if kind == "rfft" else "row_col"
+        plan = FFTPlan(shape=(size, size), algo=algo, block_batch=8,
+                       backend="jnp", kind=kind)
     else:
-        cfg = _Cfg(shape=(size, size), algo="fused")
-    return tttrace.trace_plan(cfg, arch=a, batch=1)
+        plan = FFTPlan(shape=(size, size), algo="fused", block_batch=1,
+                       backend="pallas", kind=kind)
+    return tttrace.trace_plan(plan, arch=a, batch=1)
 
 
 def compare(arch_a="wormhole_n300", arch_b="xeon_8160", *,
             sizes: Optional[Sequence[int]] = None,
-            source: str = "paper") -> List[dict]:
+            source: str = "paper", transform: str = "fft2") -> List[dict]:
     """Per-size comparison rows of ``arch_a`` (the paper's accelerator)
     against ``arch_b`` (the baseline).
 
     Ratios follow the paper's phrasing: ``time_ratio`` is a_time/b_time
     (>1 means a is slower), ``power_ratio`` and ``energy_ratio`` are
-    b/a (>1 means a draws/spends less).
+    b/a (>1 means a draws/spends less).  ``transform="rfft2"`` compares
+    the real-input transform the distributed path actually ships — model
+    source only, since the paper published no real-input anchors.
     """
     a, b = get_arch(arch_a), get_arch(arch_b)
     assert source in ("paper", "model"), source
+    assert transform in ("fft2", "rfft2"), transform
+    if transform == "rfft2" and source != "model":
+        raise ValueError("transform='rfft2' has no published anchors; "
+                         "pass source='model'")
     if source == "paper":
         ta = a.published.get("time_ms", {})
         tb = b.published.get("time_ms", {})
@@ -83,19 +88,20 @@ def compare(arch_a="wormhole_n300", arch_b="xeon_8160", *,
         return rows
     rows = []
     for s in (sizes or (256, 512, 1024)):
-        tr_a = _model_row_seconds(a, s)
-        tr_b = _model_row_seconds(b, s)
+        tr_a = _model_row_seconds(a, s, transform)
+        tr_b = _model_row_seconds(b, s, transform)
         rows.append(_row(s, source, a.name, b.name,
                          tr_a.seconds * 1e3, tr_b.seconds * 1e3,
-                         tr_a.power_w, tr_b.power_w))
+                         tr_a.power_w, tr_b.power_w, transform=transform))
     return rows
 
 
-def _row(size, source, name_a, name_b, t_a_ms, t_b_ms, p_a, p_b) -> dict:
+def _row(size, source, name_a, name_b, t_a_ms, t_b_ms, p_a, p_b, *,
+         transform: str = "fft2") -> dict:
     e_a = p_a * t_a_ms * 1e-3                  # joules
     e_b = p_b * t_b_ms * 1e-3
     return {
-        "size": int(size), "source": source,
+        "size": int(size), "source": source, "transform": transform,
         "arch_a": name_a, "arch_b": name_b,
         "time_a_ms": t_a_ms, "time_b_ms": t_b_ms,
         "power_a_w": p_a, "power_b_w": p_b,
@@ -115,8 +121,11 @@ def markdown_table(rows: List[dict]) -> str:
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
+        tf = r.get("transform", "fft2")
+        cell = f"{r['size']}x{r['size']}" if tf == "fft2" \
+            else f"{tf} {r['size']}x{r['size']}"
         out.append(
-            f"| {r['size']}x{r['size']} | {r['time_a_ms']:.2f} | "
+            f"| {cell} | {r['time_a_ms']:.2f} | "
             f"{r['time_b_ms']:.2f} | {r['power_a_w']:.0f} | "
             f"{r['power_b_w']:.0f} | {r['energy_a_j']:.3f} | "
             f"{r['energy_b_j']:.3f} | {r['time_ratio']:.2f} | "
@@ -180,9 +189,14 @@ def main() -> None:
     ap.add_argument("--arch-a", default="wormhole_n300")
     ap.add_argument("--arch-b", default="xeon_8160")
     ap.add_argument("--source", default="paper", choices=("paper", "model"))
+    ap.add_argument("--transform", default="fft2",
+                    choices=("fft2", "rfft2"),
+                    help="rfft2 compares the real-input transform "
+                         "(model source only)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
-    rows = compare(args.arch_a, args.arch_b, source=args.source)
+    rows = compare(args.arch_a, args.arch_b, source=args.source,
+                   transform=args.transform)
     print(to_json(rows) if args.json else markdown_table(rows))
 
 

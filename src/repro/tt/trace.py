@@ -350,9 +350,17 @@ def _rfft_stages(plan, a: Arch, *, batch: int,
     inverse's Hermitian-extended ifft.  The 2-D row pass works on the
     real axis, the column pass on the (w/2+1)-wide half spectrum — the
     halved-transpose-bytes saving the ROADMAP notes for dist.rfft2.
+    ``algo="fused"`` (the pallas real-input kernel) traces to ONE stage
+    at half-width bytes (:func:`_rfft_fused2d_stage`).
     """
     kw = dict(radix=plan.radix, block_batch=plan.block_batch,
               elem_bytes=elem_bytes)
+    if plan.ndim == 2 and plan.algo == "fused":
+        h, w = plan.shape
+        return [_rfft_fused2d_stage(a, h=h, w=w, batch=batch,
+                                    inverse=plan.inverse,
+                                    block_batch=plan.block_batch,
+                                    elem_bytes=elem_bytes)]
     if plan.ndim == 1:
         n = plan.shape[0]
         inner = n if plan.inverse else n // 2
@@ -414,6 +422,59 @@ def _fused2d_stage(a: Arch, *, h: int, w: int, batch: int, radix: int,
                      dram_in=total + tw, dram_out=total,
                      sram_read=sram_rw, sram_write=sram_rw,
                      sram_high_water=high_water, grid_steps=grid_steps)
+
+
+def fourstep_table_bytes(n: int, *, elem_bytes: int = 8) -> int:
+    """Bytes of the one-level four-step operand tables the fused rfft
+    kernel stages per axis: both factor DFT matrices plus the (n1, n2)
+    inter-factor twiddle, re+im planes (``elem_bytes`` per split-complex
+    element, matching :func:`repro.kernels.rfft2d_fused.fourstep_tables_np`).
+    """
+    from repro.kernels.rfft2d_fused import fourstep_factors
+    n1, n2 = fourstep_factors(n)
+    return (n1 * n1 + n2 * n2 + n1 * n2) * elem_bytes
+
+
+def _rfft_fused2d_stage(a: Arch, *, h: int, w: int, batch: int,
+                        inverse: bool, block_batch: int,
+                        elem_bytes: int) -> TraceStage:
+    """The fused real-input 2-D kernel
+    (:mod:`repro.kernels.rfft2d_fused`): ONE stage moving a real plane on
+    one side and a half spectrum on the other — ~half the complex fused
+    kernel's DRAM traffic per image — with the half-width tile as the
+    VMEM working set (which is what lets the 1024x1024 fp32 case fit the
+    16 MiB budget the complex kernel busts).  Both passes are four-step
+    DFT matmuls; FLOPs follow the same 8*n*(n1+n2) accounting as
+    :func:`_fft_pass_stage`'s four_step arm.
+    """
+    from repro.kernels.rfft2d_fused import fourstep_factors
+    wh = w // 2 + 1
+    half = elem_bytes // 2
+    real_plane = float(batch) * h * w * half        # the real input/output
+    spec_plane = float(batch) * h * wh * elem_bytes  # the half spectrum
+    bb = max(1, min(block_batch, batch))
+    grid_steps = math.ceil(batch / bb)
+    tw = fourstep_table_bytes(w, elem_bytes=elem_bytes) \
+        + fourstep_table_bytes(h, elem_bytes=elem_bytes)
+    n1w, n2w = fourstep_factors(w)
+    n1h, n2h = fourstep_factors(h)
+    flops = batch * ((h / 2) * (8.0 * w * (n1w + n2w) + 6.0 * w)  # row pairs
+                     + 10.0 * h * wh                              # untangle
+                     + wh * (8.0 * h * (n1h + n2h) + 6.0 * h))    # columns
+    # each pass streams its tile through SRAM ~3x (matmul in/out + twiddle
+    # round), the untangle adds one half-spectrum round-trip
+    row_tile = float(batch) * (h // 2) * w * elem_bytes
+    sram_rw = 3 * row_tile + 3 * spec_plane + spec_plane
+    # working set: the half-width column tile ping-pong (its (w/2+1) * h
+    # spectrum is the widest live value) plus the four-step tables
+    high_water = 2 * bb * h * wh * elem_bytes + tw
+    name = "fused_irfft2d" if inverse else "fused_rfft2d"
+    dram_in = (spec_plane if inverse else real_plane) + tw
+    dram_out = real_plane if inverse else spec_plane
+    return _mk_stage(name, a, flops=flops, dram_in=dram_in,
+                     dram_out=dram_out, sram_read=sram_rw,
+                     sram_write=sram_rw, sram_high_water=high_water,
+                     grid_steps=grid_steps)
 
 
 def predict_cost(plan, *, arch="wormhole_n300", batch: int = 1) -> float:

@@ -39,10 +39,12 @@ def _rand(shape, seed):
 # must demote to jnp, not crash), under scalar and ragged batch dims.
 
 C2C_SIZES = (27, 31, 54, 64, 512)        # odd, prime, 2xodd, pow2, pow2-big
-RFFT_SIZES = (54, 62, 64, 512)           # rfft needs even lengths
+RFFT_SIZES = (54, 62, 64, 512, 1024)     # rfft needs even lengths; 1024's
+                                         # inner 512 is the 1-D kernel path
 BATCHES = ((), (3,), (2, 3))             # scalar batch and ragged leading dims
 C2C_2D = ((9, 31), (12, 54), (16, 16))
-RFFT_2D = ((10, 22), (9, 54), (16, 32))
+RFFT_2D = ((10, 22), (9, 54), (16, 32), (64, 32))   # pow2 pairs hit the
+                                                    # fused rfft kernel
 
 
 def _assert_close(got, ref, tol=5e-4):
@@ -115,8 +117,47 @@ def test_irfft2_explicit_shape_matches_numpy():
             got = np.asarray(irfft2(xf, s=s, **kw))
             assert got.shape == ref.shape, (s, kw, got.shape)
             _assert_close(got, ref, 2e-4)
-    with pytest.raises(AssertionError, match="even"):
-        irfft2(xf, s=(24, 31))
+    with pytest.raises(ValueError, match="positive"):
+        irfft2(xf, s=(24, 0))
+
+
+def test_irfft2_odd_widths_match_numpy():
+    """Odd output widths follow numpy's odd-s semantics on the direct
+    path (the registry's rfft keys cover even widths only)."""
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((24, 32)).astype(np.float32)
+    spec = np.fft.rfft2(x)
+    xf = from_complex(jnp.asarray(spec.astype(np.complex64)))
+    for s in ((24, 31), (24, 33), (11, 27), (36, 63)):
+        ref = np.fft.irfft2(spec, s=s)
+        got = np.asarray(irfft2(xf, s=s))
+        assert got.shape == ref.shape, (s, got.shape)
+        _assert_close(got, ref, 2e-4)
+    # 1-D twin: odd n routes through the direct Hermitian extension
+    sp1 = np.fft.rfft(x[0])
+    xf1 = from_complex(jnp.asarray(sp1.astype(np.complex64)))
+    for n in (15, 17, 31):
+        ref1 = np.fft.irfft(sp1, n=n)
+        got1 = np.asarray(irfft(xf1, n=n))
+        assert got1.shape == ref1.shape, n
+        _assert_close(got1, ref1, 2e-4)
+
+
+def test_rfft_pallas_demotes_with_registry_visible_reason():
+    """Shapes with no kernel path must fall back to jnp cleanly — and the
+    interned plan says why (not a crash, not a silent demotion)."""
+    clear_plan_cache()
+    for shape in ((54,), (62,), (10, 22), (9, 54)):
+        p = get_plan(shape, kind="rfft", backend="pallas")
+        assert p.backend == "jnp", shape
+        assert p.demote_reason, shape
+    # ...while kernel-capable shapes stay on pallas with no reason
+    p1 = get_plan((1024,), kind="rfft", backend="pallas")
+    assert p1.backend == "pallas" and p1.demote_reason is None
+    p2 = get_plan((16, 32), kind="rfft", backend="pallas")
+    assert p2.backend == "pallas" and p2.algo == "fused"
+    assert p2.demote_reason is None
+    clear_plan_cache()
 
 
 # ---------------------------------------------------------------------------

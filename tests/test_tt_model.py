@@ -344,6 +344,60 @@ def test_trace_1d_plans_and_energy_scaling():
     assert r2.stages[0].sram_bytes > small.stages[0].sram_bytes
 
 
+def test_vmem_high_water_fused_rfft_1024_fits():
+    """The tentpole's model pin, next to the 16838656 B complex golden:
+    the fused rfft kernel's 1024x1024 fp32 working set is the half-width
+    column tile ping-pong (2 x 1024 x 513 split-complex) plus the
+    four-step tables — 8454144 B, UNDER the 16 MiB v5e budget the complex
+    fused kernel busts.  Real-input specialisation flips the verdict."""
+    rfused = FFTPlan(shape=(1024, 1024), algo="fused", backend="pallas",
+                     block_batch=1, kind="rfft")
+    t = tttrace.trace_plan(rfused, arch="tpu_v5e")
+    assert [s.name for s in t.stages] == ["fused_rfft2d"]   # ONE stage
+    tables = 2 * 3 * 32 * 32 * 8                 # (n1^2+n2^2+n1*n2) x 2 axes
+    assert tttrace.fourstep_table_bytes(1024) == tables // 2 == 24576
+    assert t.sram_high_water == 2 * 1024 * 513 * 8 + tables == 8454144
+    assert t.fits and t.sram_budget == 16 * MIB
+    assert tttrace.predict_cost(rfused, arch="tpu_v5e") < float("inf")
+    # the complex golden next door stays pinned (and busted)
+    c = tttrace.trace_plan(_fused(1024), arch="tpu_v5e")
+    assert c.sram_high_water == 16838656 and not c.fits
+    # HBM bytes: one real plane + one half spectrum ~ half the complex
+    # kernel's two full planes
+    ratio = t.dram_bytes / c.dram_bytes
+    assert 0.49 < ratio < 0.52, ratio
+    # the inverse twin mirrors the footprint
+    ti = tttrace.trace_plan(
+        FFTPlan(shape=(1024, 1024), algo="fused", backend="pallas",
+                block_batch=1, kind="rfft", inverse=True), arch="tpu_v5e")
+    assert ti.stages[0].name == "fused_irfft2d"
+    assert ti.sram_high_water == 8454144 and ti.fits
+    assert ti.dram_bytes == t.dram_bytes
+    # NoC: the fused kernel never crosses the mesh; the jnp rfft schedule
+    # pays the (halved) global transpose on a Tensix mesh
+    tw = tttrace.trace_plan(rfused, arch="wormhole_n300")
+    assert tw.noc_bytes == 0
+    from repro.core import clear_plan_cache, get_plan
+    clear_plan_cache()
+    jn = tttrace.trace_plan(get_plan((1024, 1024), kind="rfft"),
+                            arch="wormhole_n300")
+    assert jn.noc_bytes > 0
+    clear_plan_cache()
+
+
+def test_predicted_ordering_fused_rfft_beats_jnp_schedule():
+    """prune="model" support for rfft keys: the fused kernel must outrank
+    the jnp schedule wherever it fits."""
+    for size in (256, 512):
+        fused = FFTPlan(shape=(size, size), algo="fused", backend="pallas",
+                        block_batch=1, kind="rfft")
+        jnp_plan = FFTPlan(shape=(size, size), algo="naive", backend="jnp",
+                           block_batch=8, kind="rfft")
+        for arch in ("wormhole_n300", "tpu_v5e"):
+            assert tttrace.predict_cost(fused, arch=arch) < \
+                tttrace.predict_cost(jnp_plan, arch=arch), (size, arch)
+
+
 def test_trace_rfft_plans_price_the_real_schedule():
     """rfft-kind plans must trace their actual schedule: inner half-length
     pass + untangle in 1-D; half-width spectrum transpose + column pass in
@@ -402,3 +456,25 @@ def test_paper_table_reproduces_power_and_energy_ratios():
 def test_model_mode_table_runs():
     rows = ttreport.compare(source="model", sizes=(256,))
     assert rows[0]["time_a_ms"] > 0 and rows[0]["energy_b_j"] > 0
+
+
+def test_rfft2_row_in_wormhole_vs_xeon_table():
+    """The §6 comparison covers the real-input transform the distributed
+    path ships: rfft2 model rows exist, run faster than the complex fft2
+    rows on both archs (half the movement), and render in the table."""
+    sizes = (256, 1024)
+    c_rows = ttreport.compare(source="model", sizes=sizes)
+    r_rows = ttreport.compare(source="model", sizes=sizes,
+                              transform="rfft2")
+    for cr, rr in zip(c_rows, r_rows):
+        assert rr["transform"] == "rfft2" and cr["transform"] == "fft2"
+        assert rr["size"] == cr["size"]
+        assert rr["time_a_ms"] > 0 and rr["energy_a_j"] > 0
+        # the Xeon baseline's rfft2 schedule halves the row-column
+        # movement and FLOPs: strictly faster than its c2c fft2
+        assert 0 < rr["time_b_ms"] < cr["time_b_ms"]
+    md = ttreport.markdown_table(r_rows)
+    assert "rfft2 1024x1024" in md
+    # no published real-input anchors: paper source must refuse
+    with pytest.raises(ValueError, match="anchors"):
+        ttreport.compare(source="paper", transform="rfft2")
