@@ -56,7 +56,7 @@ def model_vs_measured(sizes) -> dict:
         shp = (batch, size, size)
         x = SplitComplex(jnp.asarray(rng.standard_normal(shp), jnp.float32),
                          jnp.asarray(rng.standard_normal(shp), jnp.float32))
-        measured_us = _time_candidates([p for _, p in cands], x, iters=3)
+        measured_us, _ = _time_candidates([p for _, p in cands], x, iters=3)
         row = {"batch": batch,
                "measured_us": {lbl: round(us, 1)
                                for (lbl, _), us in zip(cands, measured_us)}}

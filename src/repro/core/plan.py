@@ -113,6 +113,18 @@ class FFTPlan:
     # -- execution -----------------------------------------------------------
 
     def __call__(self, x) -> SplitComplex:
+        """Execute through the guarded executor
+        (:mod:`repro.resilience.executor`): eager kernel executions are
+        integrity-checked and fall back to the jnp schedule on failure
+        (repeated failures open the key's circuit breaker and demote the
+        registry entry with ``demote_reason="runtime_circuit_open"``);
+        traced calls — and disabled resilience — take the raw path
+        unchanged."""
+        from repro.resilience import executor as _rexec
+        return _rexec.execute(self, x)
+
+    def _execute(self, x) -> SplitComplex:
+        """The raw execution path (no guards, no fallback)."""
         if self.kind == "rfft":
             return self._call_rfft(x)
         assert x.shape[-self.ndim:] == self.shape, (x.shape, self.shape)
@@ -182,7 +194,8 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
              algo: str = "auto", backend: str = "jnp", kind: str = "c2c",
              tune: bool = False, tune_batch: int = 8,
              prune: str = "none", prune_k: Optional[int] = None,
-             model_arch: str = "tpu_v5e") -> FFTPlan:
+             model_arch: str = "tpu_v5e",
+             measure_timeout_s: Optional[float] = "config") -> FFTPlan:
     """The registry entry point: return the interned plan for this key,
     resolving (or autotuning) it on first request.
 
@@ -207,6 +220,11 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     :mod:`repro.tt.trace` cost model on ``model_arch`` and measure only the
     ``prune_k`` most promising (default: half, min 2 — the heuristic
     default config is always measured).
+
+    ``measure_timeout_s`` is the per-candidate measurement watchdog (one
+    retry, then the candidate is excluded — a hung config cannot hang
+    tuning); the default defers to the resilience config
+    (``resilience.config.get("measure_timeout_s")``), ``None`` disables it.
     """
     shape = tuple(int(d) for d in shape)
     assert len(shape) in (1, 2), f"1-D or 2-D plans only, got {shape}"
@@ -306,7 +324,8 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     if tune and not plan.tuned:
         plan = _autotune(cache_key, plan, batch=tune_batch,
                          fixed_algo=algo != "auto", fixed_radix=fixed_radix,
-                         prune=prune, prune_k=prune_k, model_arch=model_arch)
+                         prune=prune, prune_k=prune_k, model_arch=model_arch,
+                         measure_timeout_s=measure_timeout_s)
         cache[cache_key] = plan
     return plan
 
@@ -315,6 +334,30 @@ def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _OVERRIDE_CACHE.clear()
     _AUTOTUNE_RUNS.clear()
+
+
+# -- runtime demotion (driven by the resilience circuit breaker) ------------
+
+def _runtime_demote(key: PlanKey, reason: str = "runtime_circuit_open"):
+    """Swap the auto registry entry for ``key`` (a pallas key) with its jnp
+    schedule, carrying a registry-visible ``demote_reason``.  Anyone calling
+    :func:`get_plan` for this key now receives the demoted plan; holders of
+    the old object still route through the same circuit breaker.  Returns
+    the entry that was displaced (None if the key was never interned)."""
+    shape, dtype, inverse, _backend, kind = key
+    orig = _PLAN_CACHE.get(key)
+    twin = get_plan(shape, dtype=dtype, inverse=inverse, kind=kind,
+                    backend="jnp")
+    _PLAN_CACHE[key] = dataclasses.replace(twin, demote_reason=reason)
+    return orig
+
+
+def _runtime_restore(key: PlanKey, plan: "FFTPlan") -> None:
+    """Undo :func:`_runtime_demote`: re-promote the healthy plan."""
+    if plan is None:
+        _PLAN_CACHE.pop(key, None)
+    else:
+        _PLAN_CACHE[key] = plan
 
 
 def plan_cache_size() -> int:
@@ -369,6 +412,12 @@ def save_wisdom(path: str) -> int:
     "wisdom" style.  Each entry carries a hash of its (version, key) so a
     stale or hand-edited file cannot silently poison the registry.
     Returns the number of entries written.
+
+    The write is **atomic**: the payload lands in a same-directory temp
+    file that is ``os.replace``-d over ``path``, so a crash mid-write (or
+    a concurrent writer losing the race) can never leave a torn wisdom
+    file — readers see either the old complete file or the new one.  A
+    crash leaves only a stale ``.tmp.<pid>`` sibling behind.
     """
     entries = []
     for key, plan in sorted(_PLAN_CACHE.items(), key=lambda kv: repr(kv[0])):
@@ -386,10 +435,20 @@ def save_wisdom(path: str) -> int:
             "backend": plan.backend,
             "tune_report": plan.tune_report,
         })
-    with open(path, "w") as fh:
-        json.dump({"version": WISDOM_VERSION, "entries": entries}, fh,
-                  indent=2)
-        fh.write("\n")
+    payload = json.dumps({"version": WISDOM_VERSION, "entries": entries},
+                         indent=2) + "\n"
+    tmp = f"{path}.tmp.{os.getpid()}"
+    from repro.resilience import faults as _faults
+    with open(tmp, "w") as fh:
+        fh.write(payload[:len(payload) // 2])
+        # crash-simulation point: a "wisdom.save" error fault aborts here,
+        # after a partial write but before the atomic rename — exactly the
+        # torn state the temp-file protocol exists to keep out of ``path``
+        _faults.check("wisdom.save", tag=path)
+        fh.write(payload[len(payload) // 2:])
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
     return len(entries)
 
 
@@ -444,24 +503,58 @@ def load_wisdom(path: str, *, strict: bool = False) -> int:
 WISDOM_ENV = "REPRO_FFT_WISDOM"
 
 
+_WISDOM_WARNED = False
+
+
+def _warn_wisdom_once(msg: str) -> None:
+    """One-shot observability for a bad ``$REPRO_FFT_WISDOM`` file: warn
+    exactly once per process (imports can re-enter) and never raise."""
+    global _WISDOM_WARNED
+    if _WISDOM_WARNED:
+        return
+    _WISDOM_WARNED = True
+    import warnings
+    warnings.warn(f"{WISDOM_ENV}: {msg}; starting with a cold plan registry",
+                  RuntimeWarning, stacklevel=3)
+
+
 def _autoload_wisdom() -> int:
     """Load wisdom from ``$REPRO_FFT_WISDOM`` at import, FFTW style.
 
     Best-effort by design: an unset/empty variable is a no-op and a
     missing or corrupt file must never break ``import repro`` — bad
-    entries are already skipped non-strictly by :func:`load_wisdom`.
-    Returns the number of entries installed (kept in
-    ``WISDOM_AUTOLOADED`` for introspection).
+    entries are already skipped non-strictly by :func:`load_wisdom`.  But
+    best-effort is not *silent*: an unreadable, non-JSON, wrong-shape or
+    version-mismatched file emits a one-shot :class:`RuntimeWarning`
+    naming the path and the error class, so a corrupted wisdom deployment
+    is observable instead of just mysteriously slow.  Returns the number
+    of entries installed (kept in ``WISDOM_AUTOLOADED`` for
+    introspection).
     """
     path = os.environ.get(WISDOM_ENV, "").strip()
     if not path:
         return 0
     try:
-        return load_wisdom(path)
+        loaded = load_wisdom(path)
     except (OSError, ValueError, TypeError, AttributeError, KeyError,
-            json.JSONDecodeError):
+            json.JSONDecodeError) as e:
         # unreadable, not JSON, or JSON of the wrong shape entirely
+        _warn_wisdom_once(f"failed to load wisdom from {path!r}: "
+                          f"{type(e).__name__}: {e}")
         return 0
+    if loaded == 0:
+        # loaded-but-empty is legitimate (a fresh save with no tuned
+        # plans); a version mismatch is not — name it
+        try:
+            with open(path) as fh:
+                version = json.load(fh).get("version")
+        except Exception:  # noqa: BLE001 — diagnosis only, already loaded=0
+            version = WISDOM_VERSION
+        if version != WISDOM_VERSION:
+            _warn_wisdom_once(f"wisdom file {path!r} has version "
+                              f"{version!r}, expected {WISDOM_VERSION} "
+                              "(all entries skipped)")
+    return loaded
 
 
 WISDOM_AUTOLOADED = _autoload_wisdom()
@@ -471,22 +564,86 @@ WISDOM_AUTOLOADED = _autoload_wisdom()
 # Autotuner
 # ---------------------------------------------------------------------------
 
+class CandidateTimeout(RuntimeError):
+    """An autotune candidate measurement exceeded the watchdog timeout."""
+
+
+def _watchdog_call(work, timeout_s: Optional[float]):
+    """Run ``work()`` with a timeout: the call executes on a daemon thread
+    and :class:`CandidateTimeout` is raised if it does not return in time
+    (the stuck thread is abandoned — a daemon can never block exit)."""
+    if timeout_s is None:
+        return work()
+    import threading
+    out, err = [], []
+
+    def runner():
+        try:
+            out.append(work())
+        except BaseException as e:  # noqa: BLE001 — reraised on the caller
+            err.append(e)
+
+    th = threading.Thread(target=runner, daemon=True,
+                          name="repro-autotune-measure")
+    th.start()
+    th.join(timeout_s)
+    if th.is_alive():
+        raise CandidateTimeout(f"measurement exceeded {timeout_s:g}s")
+    if err:
+        raise err[0]
+    return out[0]
+
+
 def _time_candidates(plans, x: SplitComplex, *, warmup: int = 1,
-                     iters: int = 5):
+                     iters: int = 5, labels=None,
+                     timeout_s: Optional[float] = None):
     """Best-of-iters wall time (us) per candidate, measured round-robin so
     machine-load drift hits every candidate equally instead of whichever
-    happened to run during a busy stretch."""
+    happened to run during a busy stretch.
+
+    Every measurement runs under a per-candidate watchdog (``timeout_s``,
+    None = off): a candidate that hangs gets ONE retry during warmup and is
+    then excluded (time = +inf) instead of hanging the whole tuning run —
+    one bad config must never cost the registry its autotuner.  Returns
+    ``(times_us, timed_out_labels)``.
+    """
+    from repro.resilience import faults as _faults
+    labels = labels if labels is not None else [str(i) for i in
+                                                range(len(plans))]
     fns = [jax.jit(lambda q, p=p: p(q)) for p in plans]
-    for fn in fns:
-        for _ in range(warmup):
-            jax.block_until_ready(fn(x))
     best = [float("inf")] * len(fns)
-    for _ in range(iters):
-        for i, fn in enumerate(fns):
+    dead = [False] * len(fns)
+    timed_out = []
+
+    def measure(i):
+        def work():
+            _faults.check("autotune.measure", tag=labels[i])
             t0 = time.perf_counter()
-            jax.block_until_ready(fn(x))
-            best[i] = min(best[i], time.perf_counter() - t0)
-    return [b * 1e6 for b in best]
+            jax.block_until_ready(fns[i](x))
+            return time.perf_counter() - t0
+        return _watchdog_call(work, timeout_s)
+
+    for i in range(len(fns)):
+        for attempt in range(1 + warmup):        # warmup + one retry
+            try:
+                measure(i)
+                break
+            except CandidateTimeout:
+                if attempt == warmup:            # retries exhausted
+                    dead[i] = True
+                    timed_out.append(labels[i])
+    for _ in range(iters):
+        for i in range(len(fns)):
+            if dead[i]:
+                continue
+            try:
+                best[i] = min(best[i], measure(i))
+            except CandidateTimeout:
+                dead[i] = True
+                best[i] = float("inf")           # a hanger can never win
+                if labels[i] not in timed_out:
+                    timed_out.append(labels[i])
+    return [b * 1e6 for b in best], timed_out
 
 
 def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
@@ -614,10 +771,18 @@ def _model_prune(cands, *, batch: int, prune_k: Optional[int],
 def _autotune(key, plan: FFTPlan, *, batch: int = 8,
               fixed_algo: bool = False, fixed_radix: bool = False,
               prune: str = "none", prune_k: Optional[int] = None,
-              model_arch: str = "tpu_v5e") -> FFTPlan:
+              model_arch: str = "tpu_v5e",
+              measure_timeout_s: Optional[float] = "config") -> FFTPlan:
     """Measure every candidate config (or, with ``prune="model"``, the
-    model-ranked top-k) and return the winner (tuned=True)."""
+    model-ranked top-k) and return the winner (tuned=True).  Candidates
+    that exceed the per-measurement watchdog are excluded (one retry
+    first) and named in ``tune_report["timeouts"]``; if *every* candidate
+    times out the heuristic default is kept untouched (winner
+    ``"default/untimed"``)."""
     _AUTOTUNE_RUNS[key] = _AUTOTUNE_RUNS.get(key, 0) + 1
+    if measure_timeout_s == "config":
+        from repro.resilience import config as _rcfg
+        measure_timeout_s = _rcfg.get("measure_timeout_s")
     rng = np.random.default_rng(0)
     shp = (batch,) + plan.shape
     dt = jnp.dtype(plan.dtype)
@@ -638,14 +803,24 @@ def _autotune(key, plan: FFTPlan, *, batch: int = 8,
         cands, pruned_labels = _model_prune(cands, batch=batch,
                                             prune_k=prune_k,
                                             model_arch=model_arch)
-    times = _time_candidates([c for _, c in cands], x)
-    report = {label: round(us, 1) for (label, _), us in zip(cands, times)}
-    best = min(range(len(cands)), key=times.__getitem__)
-    report["winner"] = cands[best][0]
+    times, timed_out = _time_candidates(
+        [c for _, c in cands], x, labels=[lbl for lbl, _ in cands],
+        timeout_s=measure_timeout_s)
+    report = {label: (round(us, 1) if us != float("inf") else "timeout")
+              for (label, _), us in zip(cands, times)}
     report["n_candidates"] = n_all
     report["n_measured"] = len(cands)
     if pruned_labels:
         report["model_pruned"] = "|".join(pruned_labels)
+    if timed_out:
+        report["timeouts"] = "|".join(timed_out)
+    if all(t == float("inf") for t in times):
+        # every candidate hung: keep the heuristic default, but mark the
+        # key tuned so the pathological measurement is not re-run per call
+        report["winner"] = "default/untimed"
+        return dataclasses.replace(plan, tuned=True, tune_report=report)
+    best = min(range(len(cands)), key=times.__getitem__)
+    report["winner"] = cands[best][0]
     return dataclasses.replace(cands[best][1], tuned=True, tune_report=report)
 
 

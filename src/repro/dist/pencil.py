@@ -43,7 +43,11 @@ its per-device payload bytes — as priced by
 :func:`repro.dist.compression.wire_bytes` — in a module-level wire log
 (:func:`reset_wire_log` / :func:`wire_log` / :func:`logged_exchange_bytes`)
 so tests and benchmarks can pin *measured* exchange traffic against the
-:func:`repro.tt.trace.trace_dist` prediction.
+:func:`repro.tt.trace.trace_dist` prediction.  ``verify=True`` on
+:func:`pfft2` / :func:`prfft2` / :func:`pirfft2` additionally checksums
+every exchange in-graph (global payload energy) and retries the transform
+once on mismatch — :class:`ExchangeIntegrityError` on a repeat failure,
+never a silent wrong answer (see the exchange-integrity block below).
 
 All local 1-D passes route through the plan registry
 (:mod:`repro.core.plan`) via ``algo="auto"``, so the fused/Stockham kernels
@@ -64,6 +68,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.complexmath import SplitComplex
 from repro.core import fft1d
 from repro.core import plan as plan_lib
+
+from repro.resilience import faults as _faults
 
 from ._compat import all_to_all, shard_map_unchecked
 from .compression import all_to_all_compressed, wire_bytes
@@ -106,6 +112,92 @@ def _log_wire(tag: str, method: str, nbytes: int) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Exchange integrity: energy checksum, verified post-exchange
+# ---------------------------------------------------------------------------
+# An all_to_all is a permutation of the payload, so the *global* payload
+# energy (sum of squares, psum'd over the mesh axis) is conserved exactly —
+# a lightweight in-graph checksum with no extra wire beyond two scalar
+# psums.  A dropped shard removes ~1/p of the energy, a scaled/garbled
+# payload shifts it, and a NaN/Inf poisons the comparison (NaN <= tol is
+# False) — all detected by one relative-delta test.  ``verify=True`` on
+# :func:`pfft2` / :func:`prfft2` / :func:`pirfft2` threads every exchange's
+# delta out of the shard_map as a replicated scalar, checks it eagerly, and
+# retries the whole transform **once** on mismatch (a transient wire fault
+# does not recur; the injected ``dist.exchange`` faults are consumed on the
+# first attempt, which is exactly the transient model).  A second mismatch
+# raises :class:`ExchangeIntegrityError` — never a silent wrong answer.
+# Lossy wire formats legitimately perturb energy, hence per-method
+# tolerances.
+
+_VERIFY_TOL = {"none": 1e-3, "bf16": 2e-2, "int8": 2e-2}
+
+_EXCHANGE_LOG = collections.deque(maxlen=256)
+
+
+class ExchangeIntegrityError(RuntimeError):
+    """A pencil exchange failed its energy checksum even after retry."""
+
+    def __init__(self, tag: str, delta: float, tol: float):
+        self.tag, self.delta, self.tol = tag, delta, tol
+        super().__init__(
+            f"exchange checksum mismatch in {tag!r}: relative energy "
+            f"delta {delta:.3g} > {tol:g} after retry")
+
+
+def reset_exchange_log() -> None:
+    _EXCHANGE_LOG.clear()
+
+
+def exchange_log() -> list:
+    """Recent verification events ``{"tag", "method", "delta", "ok",
+    "attempt"}`` — one per verified transform attempt (most recent 256)."""
+    return list(_EXCHANGE_LOG)
+
+
+def _payload_energy(x: SplitComplex):
+    return (jnp.sum(jnp.square(x.re.astype(jnp.float32)))
+            + jnp.sum(jnp.square(x.im.astype(jnp.float32))))
+
+
+def _wire_fault(y: SplitComplex, axis_name: str, tag: str) -> SplitComplex:
+    """The ``dist.exchange`` fault site: corrupt the payload *received on
+    device 0* (``lax.axis_index`` mask) when an armed spec fires.  Consulted
+    at trace time — the pencil bodies are re-traced per transform call, so
+    visit counting works, and a one-shot spec is consumed by the first
+    attempt, leaving the retry clean."""
+    spec = _faults.fire("dist.exchange", tag)
+    if spec is None:
+        return y
+    bad = _faults.apply_corruption(y, spec)
+    on0 = jax.lax.axis_index(axis_name) == 0
+    return SplitComplex(jnp.where(on0, bad.re, y.re),
+                        jnp.where(on0, bad.im, y.im))
+
+
+def _max_delta(collect):
+    d = collect[0]
+    for extra in collect[1:]:
+        d = jnp.maximum(d, extra)
+    return d
+
+
+def _run_verified(run, *, tag: str, method: str, retries: int = 1):
+    """Eager driver for ``verify=True`` transforms: run, check the
+    replicated delta, retry once, raise on repeat mismatch."""
+    tol = _VERIFY_TOL.get(method, _VERIFY_TOL["none"])
+    delta = float("nan")
+    for attempt in range(1 + retries):
+        out, d = run()
+        delta = float(jax.device_get(d))
+        ok = delta <= tol                    # NaN compares False: poisoned
+        _EXCHANGE_LOG.append({"tag": tag, "method": method, "delta": delta,
+                              "ok": bool(ok), "attempt": attempt})
+        if ok:
+            return out
+    raise ExchangeIntegrityError(tag, delta, tol)
+
+
+# ---------------------------------------------------------------------------
 # Local helpers (run inside shard_map on per-device blocks)
 # ---------------------------------------------------------------------------
 
@@ -126,17 +218,29 @@ def _fft_axis(x: SplitComplex, axis: int, *, inverse: bool,
 
 
 def _a2a(x: SplitComplex, axis_name: str, split_axis: int, concat_axis: int,
-         *, method: str = "none", tag: str = "a2a") -> SplitComplex:
+         *, method: str = "none", tag: str = "a2a",
+         collect=None) -> SplitComplex:
+    """One pencil exchange.  ``collect`` (a list) arms the energy checksum:
+    the exchange's relative global-energy delta is appended as a traced
+    replicated scalar for the transform body to return."""
     _log_wire(tag, method, wire_bytes((x.re, x.im), method))
+    if collect is not None:
+        e0 = jax.lax.psum(_payload_energy(x), axis_name)
     if method == "none":
-        return SplitComplex(
+        y = SplitComplex(
             all_to_all(x.re, axis_name, split_axis, concat_axis),
             all_to_all(x.im, axis_name, split_axis, concat_axis))
-    return SplitComplex(
-        all_to_all_compressed(x.re, axis_name, split_axis, concat_axis,
-                              method),
-        all_to_all_compressed(x.im, axis_name, split_axis, concat_axis,
-                              method))
+    else:
+        y = SplitComplex(
+            all_to_all_compressed(x.re, axis_name, split_axis, concat_axis,
+                                  method),
+            all_to_all_compressed(x.im, axis_name, split_axis, concat_axis,
+                                  method))
+    y = _wire_fault(y, axis_name, tag)
+    if collect is not None:
+        e1 = jax.lax.psum(_payload_energy(y), axis_name)
+        collect.append(jnp.abs(e1 - e0) / (e0 + 1e-30))
+    return y
 
 
 def _swap_last2(x: SplitComplex) -> SplitComplex:
@@ -150,7 +254,8 @@ def _swap_last2(x: SplitComplex) -> SplitComplex:
 
 def pfft2(x: SplitComplex, mesh, axis: str = "data", *, chunks: int = 1,
           transposed_output: bool = True, inverse: bool = False,
-          compress: str = "none", backend: str = "jnp") -> SplitComplex:
+          compress: str = "none", backend: str = "jnp",
+          verify: bool = False) -> SplitComplex:
     """2-D FFT of a (H, W) array whose rows are sharded over ``axis``.
 
     Schedule per device (p = mesh size along ``axis``):
@@ -168,42 +273,60 @@ def pfft2(x: SplitComplex, mesh, axis: str = "data", *, chunks: int = 1,
     ``transposed_output=False`` a second all_to_all restores natural (H, W)
     row-sharded order, so ``pfft2(pfft2(x), inverse=True)`` roundtrips.
     ``compress`` routes the exchanges through the
-    :mod:`repro.dist.compression` wire formats.
+    :mod:`repro.dist.compression` wire formats.  ``verify=True`` checksums
+    every exchange (global payload energy, conserved by any permutation),
+    retries the transform once on mismatch and raises
+    :class:`ExchangeIntegrityError` if the retry fails too.
     """
     h, w = x.shape[-2], x.shape[-1]
     p = mesh.shape[axis]
     assert h % p == 0 and w % p == 0, (x.shape, p)
     assert (h // p) % chunks == 0, (h, p, chunks)
 
-    def body(re, im):
-        rows = re.shape[0]                       # H/p local rows
-        rc = rows // chunks
-        pieces = []
-        for c in range(chunks):
-            sl = slice(c * rc, (c + 1) * rc)
-            y = _fft_last(SplitComplex(re[sl], im[sl]),
-                          inverse=inverse, backend=backend)
-            pieces.append(_a2a(y, axis, 1, 0, method=compress,
-                               tag="pfft2/a2a"))  # (p*rc, W/p), peer-major
-        if chunks == 1:
-            z = pieces[0]
-        else:
-            # chunk-major (chunks, p, rc, W/p) -> row-natural (p, chunks, ..)
-            sr = jnp.stack([q.re for q in pieces]).reshape(chunks, p, rc, -1)
-            si = jnp.stack([q.im for q in pieces]).reshape(chunks, p, rc, -1)
-            z = SplitComplex(sr.transpose(1, 0, 2, 3).reshape(h, -1),
-                             si.transpose(1, 0, 2, 3).reshape(h, -1))
-        z = _fft_axis(z, 0, inverse=inverse, backend=backend)  # (H, W/p)
-        if transposed_output:
-            return _swap_last2(z)                # (W/p, H): local only
-        return _a2a(z, axis, 0, 1, method=compress,
-                    tag="pfft2/a2a_out")         # (H/p, W): natural order
+    def run(collect=None):
+        def body(re, im):
+            rows = re.shape[0]                   # H/p local rows
+            rc = rows // chunks
+            pieces = []
+            for c in range(chunks):
+                sl = slice(c * rc, (c + 1) * rc)
+                y = _fft_last(SplitComplex(re[sl], im[sl]),
+                              inverse=inverse, backend=backend)
+                pieces.append(_a2a(y, axis, 1, 0, method=compress,
+                                   tag="pfft2/a2a",
+                                   collect=collect))  # (p*rc, W/p)
+            if chunks == 1:
+                z = pieces[0]
+            else:
+                # chunk-major (chunks, p, rc, W/p) -> natural (p, chunks, ..)
+                sr = jnp.stack([q.re for q in pieces]) \
+                        .reshape(chunks, p, rc, -1)
+                si = jnp.stack([q.im for q in pieces]) \
+                        .reshape(chunks, p, rc, -1)
+                z = SplitComplex(sr.transpose(1, 0, 2, 3).reshape(h, -1),
+                                 si.transpose(1, 0, 2, 3).reshape(h, -1))
+            z = _fft_axis(z, 0, inverse=inverse, backend=backend)  # (H, W/p)
+            if transposed_output:
+                out = _swap_last2(z)             # (W/p, H): local only
+            else:
+                out = _a2a(z, axis, 0, 1, method=compress,
+                           tag="pfft2/a2a_out",
+                           collect=collect)      # (H/p, W): natural order
+            if collect is None:
+                return out
+            return out, _max_delta(collect)
 
-    out_spec = P(axis, None)
-    fn = shard_map_unchecked(body, mesh=mesh,
-                   in_specs=(P(axis, None), P(axis, None)),
-                   out_specs=SplitComplex(out_spec, out_spec))
-    return fn(x.re, x.im)
+        out_spec = P(axis, None)
+        outs = SplitComplex(out_spec, out_spec)
+        fn = shard_map_unchecked(body, mesh=mesh,
+                       in_specs=(P(axis, None), P(axis, None)),
+                       out_specs=outs if collect is None else (outs, P()))
+        return fn(x.re, x.im)
+
+    if not verify:
+        return run()
+    return _run_verified(lambda: run(collect=[]), tag="pfft2",
+                         method=compress)
 
 
 # ---------------------------------------------------------------------------
@@ -289,7 +412,7 @@ def _fit_last(x: SplitComplex, n: int) -> SplitComplex:
 
 def prfft2(x: jnp.ndarray, mesh, axis: str = "data", *,
            transposed_output: bool = True, compress: str = "none",
-           backend: str = "jnp") -> SplitComplex:
+           backend: str = "jnp", verify: bool = False) -> SplitComplex:
     """Real-input 2-D pencil FFT of a real (H, W) array row-sharded over
     ``axis``: the distributed :func:`repro.core.fft2d.rfft2`.
 
@@ -307,33 +430,48 @@ def prfft2(x: jnp.ndarray, mesh, axis: str = "data", *,
     sharded over ``axis``; :func:`unpack_half_spectrum` expands it to the
     standard (W/2+1, H) = ``rfft2(x).T``.  ``transposed_output=False``
     spends a second (still packed, still halved) all_to_all to return the
-    natural row-sharded (H/p, W/2) layout instead.
+    natural row-sharded (H/p, W/2) layout instead.  ``verify=True``
+    checksums the exchanges as in :func:`pfft2`.
     """
     h, w = x.shape[-2], x.shape[-1]
     p = mesh.shape[axis]
     assert w % 2 == 0, f"prfft2 needs an even width, got {x.shape}"
     assert h % p == 0 and (w // 2) % p == 0, (x.shape, p)
 
-    def body(xr):
-        pl = plan_lib.get_plan((w,), dtype=xr.dtype, kind="rfft",
-                               backend=backend)
-        y = _pack_rows(pl(xr))                   # (H/p, W/2) packed
-        z = _a2a(y, axis, 1, 0, method=compress,
-                 tag="prfft2/a2a")               # (H, W/(2p))
-        z = _fft_axis(z, 0, inverse=False, backend=backend)
-        if transposed_output:
-            return _swap_last2(z)                # (W/(2p), H)
-        return _a2a(z, axis, 0, 1, method=compress,
-                    tag="prfft2/a2a_out")        # (H/p, W/2) natural
+    def run(collect=None):
+        def body(xr):
+            pl = plan_lib.get_plan((w,), dtype=xr.dtype, kind="rfft",
+                                   backend=backend)
+            y = _pack_rows(pl(xr))               # (H/p, W/2) packed
+            z = _a2a(y, axis, 1, 0, method=compress,
+                     tag="prfft2/a2a", collect=collect)  # (H, W/(2p))
+            z = _fft_axis(z, 0, inverse=False, backend=backend)
+            if transposed_output:
+                out = _swap_last2(z)             # (W/(2p), H)
+            else:
+                out = _a2a(z, axis, 0, 1, method=compress,
+                           tag="prfft2/a2a_out",
+                           collect=collect)      # (H/p, W/2) natural
+            if collect is None:
+                return out
+            return out, _max_delta(collect)
 
-    out_spec = P(axis, None)
-    fn = shard_map_unchecked(body, mesh=mesh, in_specs=(P(axis, None),),
-                             out_specs=SplitComplex(out_spec, out_spec))
-    return fn(x)
+        out_spec = P(axis, None)
+        outs = SplitComplex(out_spec, out_spec)
+        fn = shard_map_unchecked(body, mesh=mesh, in_specs=(P(axis, None),),
+                                 out_specs=outs if collect is None
+                                 else (outs, P()))
+        return fn(x)
+
+    if not verify:
+        return run()
+    return _run_verified(lambda: run(collect=[]), tag="prfft2",
+                         method=compress)
 
 
 def pirfft2(xf: SplitComplex, mesh, axis: str = "data", *, s=None,
-            compress: str = "none", backend: str = "jnp") -> jnp.ndarray:
+            compress: str = "none", backend: str = "jnp",
+            verify: bool = False) -> jnp.ndarray:
     """Inverse of :func:`prfft2`: packed transposed half spectrum (W/2, H)
     sharded over ``axis`` -> real (H, W) row-sharded.
 
@@ -350,38 +488,49 @@ def pirfft2(xf: SplitComplex, mesh, axis: str = "data", *, s=None,
         f"pirfft2 needs an even output width, got s={s}"
     assert hw % p == 0 and h_out % p == 0, (xf.shape, s, p)
 
-    def body(re, im):
-        zin = SplitComplex(re, im)                   # (W/(2p), h_in)
-        z = _fit_last(zin, h_out)                    # numpy ifft n= fit
-        z = _fft_last(z, inverse=True, backend=backend)  # (W/(2p), h_out)
-        if h_out != h_in:
-            # the H fit breaks the packed column's Hermitian symmetry (a
-            # cropped/padded DC column no longer inverse-transforms to a
-            # real signal), so the packed column is untangled at full
-            # height, fitted and transformed as two real columns, and
-            # spliced back on the device that owns global column 0
-            dc, ny = _split_packed_col(
-                SplitComplex(zin.re[0], zin.im[0]))
-            a = _fft_last(_fit_last(dc, h_out), inverse=True,
-                          backend=backend)
-            b = _fft_last(_fit_last(ny, h_out), inverse=True,
-                          backend=backend)
-            own0 = jax.lax.axis_index(axis) == 0
-            z = SplitComplex(
-                z.re.at[0].set(jnp.where(own0, a.re, z.re[0])),
-                z.im.at[0].set(jnp.where(own0, b.re, z.im[0])))
-        z = _a2a(z, axis, 1, 0, method=compress,
-                 tag="pirfft2/a2a")                  # (W/2, h_out/p)
-        z = _swap_last2(z)                           # (h_out/p, W/2) packed
-        half = fft1d._fit_half_spectrum(_unpack_rows(z), w_out)
-        pl = plan_lib.get_plan((w_out,), dtype=z.dtype, kind="rfft",
-                               inverse=True, backend=backend)
-        return pl(half)                              # real (h_out/p, w_out)
+    def run(collect=None):
+        def body(re, im):
+            zin = SplitComplex(re, im)               # (W/(2p), h_in)
+            z = _fit_last(zin, h_out)                # numpy ifft n= fit
+            z = _fft_last(z, inverse=True, backend=backend)  # (W/(2p), h_out)
+            if h_out != h_in:
+                # the H fit breaks the packed column's Hermitian symmetry (a
+                # cropped/padded DC column no longer inverse-transforms to a
+                # real signal), so the packed column is untangled at full
+                # height, fitted and transformed as two real columns, and
+                # spliced back on the device that owns global column 0
+                dc, ny = _split_packed_col(
+                    SplitComplex(zin.re[0], zin.im[0]))
+                a = _fft_last(_fit_last(dc, h_out), inverse=True,
+                              backend=backend)
+                b = _fft_last(_fit_last(ny, h_out), inverse=True,
+                              backend=backend)
+                own0 = jax.lax.axis_index(axis) == 0
+                z = SplitComplex(
+                    z.re.at[0].set(jnp.where(own0, a.re, z.re[0])),
+                    z.im.at[0].set(jnp.where(own0, b.re, z.im[0])))
+            z = _a2a(z, axis, 1, 0, method=compress,
+                     tag="pirfft2/a2a", collect=collect)  # (W/2, h_out/p)
+            z = _swap_last2(z)                       # (h_out/p, W/2) packed
+            half = fft1d._fit_half_spectrum(_unpack_rows(z), w_out)
+            pl = plan_lib.get_plan((w_out,), dtype=z.dtype, kind="rfft",
+                                   inverse=True, backend=backend)
+            out = pl(half)                           # real (h_out/p, w_out)
+            if collect is None:
+                return out
+            return out, _max_delta(collect)
 
-    fn = shard_map_unchecked(body, mesh=mesh,
-                             in_specs=(P(axis, None), P(axis, None)),
-                             out_specs=P(axis, None))
-    return fn(xf.re, xf.im)
+        out_spec = P(axis, None)
+        fn = shard_map_unchecked(body, mesh=mesh,
+                                 in_specs=(P(axis, None), P(axis, None)),
+                                 out_specs=out_spec if collect is None
+                                 else (out_spec, P()))
+        return fn(xf.re, xf.im)
+
+    if not verify:
+        return run()
+    return _run_verified(lambda: run(collect=[]), tag="pirfft2",
+                         method=compress)
 
 
 def exchange_bytes(h: int, w: int, devices: int, *, real: bool = False,

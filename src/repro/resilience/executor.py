@@ -1,0 +1,146 @@
+"""The guarded executor: every :class:`repro.core.plan.FFTPlan` call routes
+through :func:`execute`.
+
+Behaviour matrix:
+
+- **Traced input or resilience disabled** — raw execution, byte-identical
+  to the pre-resilience path.  Guards read concrete values, so code running
+  under ``jit``/``shard_map`` (the autotuner's measured candidates, the
+  pencil bodies, the serve decode step) is never taxed or altered; the
+  distributed layer has its own in-graph checksum story
+  (:mod:`repro.dist.pencil`).
+- **Eager pallas execution** — consult the key's circuit breaker, then
+  attempt the kernel inside a try/guard: a raised kernel failure
+  (including the injected ``plan.execute`` site) or a guard violation on
+  the output (``plan.output`` corruption, NaN/Inf, energy mismatch)
+  records a breaker failure and falls back to the key's **jnp schedule**
+  for this call — the caller still gets a correct result.  After
+  ``failure_threshold`` consecutive failures the breaker opens and the
+  registry entry itself is demoted
+  (``demote_reason="runtime_circuit_open"``); cooldown and half-open
+  probing re-promote it once the kernel path behaves again.
+- **Eager jnp execution** — raw (plus the basic guard when ``guard_jnp``
+  is configured); a runtime-demoted entry still drives its breaker so the
+  half-open probe happens even for callers that fetched the plan *after*
+  demotion.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.core.complexmath import SplitComplex
+from . import config, faults, guards, policy
+from .guards import GuardViolation
+from .policy import RUNTIME_DEMOTE_REASON
+
+_STATS: Dict[tuple, dict] = {}
+
+
+def _stat(key: tuple) -> dict:
+    st = _STATS.get(key)
+    if st is None:
+        st = _STATS[key] = {"attempts": 0, "failures": 0, "fallbacks": 0,
+                            "short_circuits": 0, "last_reason": None}
+    return st
+
+
+def stats(key: Optional[tuple] = None):
+    """Per-pallas-key executor counters (all keys when ``key`` is None)."""
+    return dict(_STATS) if key is None else dict(_stat(key))
+
+
+def reset() -> None:
+    """Clear executor stats AND breaker state, and restore any
+    runtime-demoted registry entries (test isolation)."""
+    from repro.core import plan as plan_mod
+    for key, br in policy.all_breakers().items():
+        if br.state != "closed":
+            plan_mod._runtime_restore(key, br.original_plan)
+    policy.reset()
+    _STATS.clear()
+
+
+def _has_tracer(x) -> bool:
+    leaves = (x.re, x.im) if isinstance(x, SplitComplex) else (x,)
+    return any(isinstance(l, jax.core.Tracer) for l in leaves)
+
+
+def _label(plan) -> str:
+    shp = "x".join(map(str, plan.shape))
+    return f"{plan.backend}/{plan.algo}/{shp}"
+
+
+def _pallas_key(plan_mod, plan) -> tuple:
+    return plan_mod._plan_key(plan.shape, plan.dtype, plan.inverse,
+                              "pallas", plan.kind)
+
+
+def execute(plan, x):
+    """Entry point: ``FFTPlan.__call__`` delegates here."""
+    if not config.get("enabled") or _has_tracer(x):
+        return plan._execute(x)
+    from repro.core import plan as plan_mod
+    if plan.backend == "pallas":
+        key = _pallas_key(plan_mod, plan)
+        br = policy.breaker(key)
+        if br is None or br.allow_attempt():
+            return _guarded_attempt(plan_mod, plan, x, key)
+        st = _stat(key)
+        st["short_circuits"] += 1
+        return _fallback(plan_mod, plan, x)
+    if plan.demote_reason == RUNTIME_DEMOTE_REASON:
+        # a runtime-demoted registry entry: the breaker still owns this
+        # key, so cooldown ticks and half-open probes run from here too
+        key = _pallas_key(plan_mod, plan)
+        br = policy.breaker(key)
+        if br is not None and br.state != "closed":
+            if br.allow_attempt():
+                return _guarded_attempt(plan_mod, br.original_plan, x, key)
+            _stat(key)["short_circuits"] += 1
+    y = plan._execute(x)
+    if config.get("guard_jnp"):
+        rep = guards.check_output(plan, x, y, level="basic")
+        if not rep.ok:
+            raise GuardViolation(rep)
+    return y
+
+
+def _guarded_attempt(plan_mod, plan, x, key: tuple):
+    """Try the pallas plan under guards; fall back to jnp on any failure."""
+    st = _stat(key)
+    st["attempts"] += 1
+    try:
+        faults.check("plan.execute", tag=_label(plan))
+        y = plan._execute(x)
+        y = faults.corrupt("plan.output", y, tag=_label(plan))
+        rep = guards.check_output(plan, x, y)
+        if not rep.ok:
+            raise GuardViolation(rep)
+    except Exception as e:          # noqa: BLE001 — resilience boundary
+        st["failures"] += 1
+        st["last_reason"] = f"{type(e).__name__}: {e}"
+        br = policy.breaker(key, create=True,
+                            original_plan=plan_mod._PLAN_CACHE.get(key, plan))
+        if br.record_failure():
+            plan_mod._runtime_demote(key)
+        st["fallbacks"] += 1
+        return _fallback(plan_mod, plan, x)
+    br = policy.breaker(key)
+    if br is not None and br.record_success():
+        plan_mod._runtime_restore(key, br.original_plan)
+    return y
+
+
+def _fallback(plan_mod, plan, x):
+    """Execute the key's jnp schedule (guarded basic) for this call."""
+    fb = plan_mod.get_plan(plan.shape, dtype=plan.dtype,
+                           inverse=plan.inverse, kind=plan.kind,
+                           backend="jnp")
+    y = fb._execute(x)
+    rep = guards.check_output(fb, x, y, level="basic")
+    if not rep.ok:
+        # the fallback failed too: nothing left to recover with — report
+        raise GuardViolation(rep)
+    return y

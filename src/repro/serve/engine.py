@@ -12,7 +12,8 @@ lower: one new token against a seq_len-deep cache.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import time
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,7 @@ import numpy as np
 from repro.core import plan as fftplan
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.resilience import faults as _faults
 
 
 @dataclasses.dataclass
@@ -30,6 +32,7 @@ class ServeConfig:
     temperature: float = 0.0         # 0 => greedy
     eos_id: Optional[int] = None
     seed: int = 0
+    fft_backend: str = "jnp"         # the backend pre-warm requests
 
 
 @dataclasses.dataclass
@@ -38,10 +41,12 @@ class _Slot:
     request_id: int = -1
     position: int = 0
     generated: Optional[list] = None
+    deadline: Optional[float] = None  # absolute clock time, None = no limit
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
@@ -52,6 +57,10 @@ class Engine:
             lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
         self._key = jax.random.PRNGKey(scfg.seed)
         self.finished: dict = {}
+        self.timed_out: set = set()   # request ids cut off by their deadline
+        self.degraded = False         # pre-warm fell back to jnp plans
+        self.degrade_reason: Optional[str] = None
+        self._clock = clock if clock is not None else time.monotonic
         self._warm_fft_plans()
 
     def _warm_fft_plans(self) -> None:
@@ -59,17 +68,39 @@ class Engine:
         call, once at engine construction (FFTW plan-then-execute) — the
         plan lives in the process-wide registry, not on the engine.  The
         seq-axis key depends on the runtime sequence length (1 per decode
-        step, prompt length at prefill), so it resolves lazily on first use."""
+        step, prompt length at prefill), so it resolves lazily on first use.
+
+        Pre-warm failure must never kill the engine: a raising plan
+        resolution (kernel compile failure, injected ``serve.prewarm``
+        fault) degrades the engine to the always-available jnp schedule —
+        ``self.degraded`` flips and ``self.degrade_reason`` says why — and
+        serving proceeds at reduced throughput instead of crashing."""
         cfg = self.cfg
         uses_fourier = (cfg.token_mixing == "fourier"
                         or any("fourier" in b for b in cfg.block_pattern))
-        if uses_fourier:
-            fftplan.get_plan((cfg.d_model,), dtype=jnp.dtype(cfg.dtype))
+        if not uses_fourier:
+            return
+        try:
+            _faults.check("serve.prewarm", tag=f"d_model={cfg.d_model}")
+            fftplan.get_plan((cfg.d_model,), dtype=jnp.dtype(cfg.dtype),
+                             backend=self.scfg.fft_backend)
+        except Exception as e:        # noqa: BLE001 — degrade, never crash
+            self.degraded = True
+            self.degrade_reason = f"{type(e).__name__}: {e}"
+            fftplan.get_plan((cfg.d_model,), dtype=jnp.dtype(cfg.dtype),
+                             backend="jnp")
 
     # -- request lifecycle ---------------------------------------------------
 
-    def add_request(self, request_id: int, prompt: np.ndarray) -> bool:
-        """Prefill `prompt` into a free slot; False if engine is full."""
+    def add_request(self, request_id: int, prompt: np.ndarray,
+                    deadline_s: Optional[float] = None) -> bool:
+        """Prefill `prompt` into a free slot; False if engine is full.
+
+        ``deadline_s`` is a per-request latency budget in seconds (measured
+        on the engine clock from admission): a request past its deadline is
+        finished with whatever it generated so far and its id recorded in
+        ``self.timed_out`` — the engine never burns decode steps on a
+        response nobody is waiting for."""
         try:
             slot_idx = next(i for i, s in enumerate(self.slots)
                             if not s.active)
@@ -90,11 +121,14 @@ class Engine:
         s.request_id = request_id
         s.position = len(prompt) - 1
         s.generated = [int(prompt[-1])]
+        s.deadline = (None if deadline_s is None
+                      else self._clock() + deadline_s)
         return True
 
     # -- engine tick -----------------------------------------------------
 
     def step(self, max_new: int):
+        _faults.check("serve.step", tag="tick")
         toks = np.zeros((self.scfg.batch_size,), np.int32)
         pos = np.full((self.scfg.batch_size,), -1_000_000, np.int32)
         for i, s in enumerate(self.slots):
@@ -110,22 +144,30 @@ class Engine:
         else:
             nxt = jnp.argmax(logits, axis=-1)
         nxt = np.asarray(nxt)
+        now = self._clock()
         for i, s in enumerate(self.slots):
             if not s.active:
                 continue
             s.generated.append(int(nxt[i]))
             s.position += 1
-            done = (len(s.generated) - 1 >= max_new
+            expired = s.deadline is not None and now >= s.deadline
+            done = (expired
+                    or len(s.generated) - 1 >= max_new
                     or (self.scfg.eos_id is not None
                         and nxt[i] == self.scfg.eos_id)
                     or s.position >= self.scfg.max_len - 1)
             if done:
+                if expired:
+                    self.timed_out.add(s.request_id)
                 self.finished[s.request_id] = list(s.generated)
                 s.active = False
                 s.generated = None
+                s.deadline = None
 
     def run(self, requests, max_new: int = 32):
-        """Serve a list of (id, prompt ndarray); returns {id: tokens}."""
+        """Serve a list of (id, prompt ndarray[, deadline_s]); returns
+        {id: tokens}.  Ids in ``self.timed_out`` were cut short by their
+        deadline (their entry holds the partial generation)."""
         pending = list(requests)
         while pending or any(s.active for s in self.slots):
             while pending and self.add_request(*pending[0]):

@@ -1,0 +1,387 @@
+"""repro.resilience: fault injection, guards, circuit breaker, guarded
+executor, autotune watchdog, serve degradation/deadlines, atomic wisdom."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import resilience
+from repro.core import plan as P
+from repro.core.complexmath import SplitComplex
+from repro.resilience import config as rconfig
+from repro.resilience import executor, faults, guards, policy
+from repro.resilience.faults import FaultInjected, FaultPlan
+from repro.resilience.policy import RUNTIME_DEMOTE_REASON
+
+SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+@pytest.fixture(autouse=True)
+def _isolate():
+    resilience.reset()
+    P.clear_plan_cache()
+    yield
+    resilience.reset()
+    P.clear_plan_cache()
+
+
+def _x(shape=(64, 64), seed=0):
+    rng = np.random.default_rng(seed)
+    return SplitComplex(
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+        jnp.asarray(rng.standard_normal(shape), jnp.float32))
+
+
+def _key(shape=(64, 64), kind="c2c", inverse=False):
+    return P._plan_key(shape, jnp.float32, inverse, "pallas", kind)
+
+
+# ---------------------------------------------------------------------------
+# Fault plans
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_visit_schedule():
+    fp = FaultPlan(seed=0).add("s", "error", after=2, times=2)
+    fired = []
+    with fp:
+        for _ in range(6):
+            try:
+                faults.check("s")
+                fired.append(False)
+            except FaultInjected:
+                fired.append(True)
+    # skip 2, fire 2, then exhausted
+    assert fired == [False, False, True, True, False, False]
+    assert fp.fired("s") == 2
+
+
+def test_fault_plan_seeded_prob_deterministic():
+    def run(seed):
+        out = []
+        with FaultPlan(seed=seed).add("s", "error", prob=0.5, times=None):
+            for _ in range(20):
+                try:
+                    faults.check("s")
+                    out.append(0)
+                except FaultInjected:
+                    out.append(1)
+        return out
+    a, b = run(7), run(7)
+    assert a == b                      # same seed, same schedule
+    assert 0 < sum(a) < 20             # actually probabilistic
+    assert run(8) != a                 # seed matters
+
+
+def test_fault_tag_filtering_and_nesting_guard():
+    fp = FaultPlan().add("s", "error", tag="pallas", times=None)
+    with fp:
+        faults.check("s", tag="jnp/row_col")          # no match: silent
+        with pytest.raises(FaultInjected):
+            faults.check("s", tag="pallas/fused/64x64")
+        with pytest.raises(RuntimeError, match="already installed"):
+            fp.__enter__()
+    assert faults.active() is None
+
+
+def test_apply_corruption_kinds():
+    v = SplitComplex(jnp.ones((4,)), jnp.ones((4,)))
+    for kind, probe in (("nan", lambda a: np.isnan(a).any()),
+                        ("inf", lambda a: np.isinf(a).any()),
+                        ("drop", lambda a: (a == 0).all()),
+                        ("corrupt", lambda a: (np.abs(a) > 2).all())):
+        with faults.inject("s", kind):
+            got = faults.corrupt("s", v)
+        assert probe(np.asarray(got.re)), kind
+
+
+# ---------------------------------------------------------------------------
+# Guards
+# ---------------------------------------------------------------------------
+
+def test_guards_pass_on_clean_outputs():
+    for kind, inverse in (("c2c", False), ("c2c", True), ("rfft", False)):
+        pl = P.get_plan((64, 64), kind=kind, inverse=inverse, backend="jnp")
+        x = _x() if kind == "c2c" else _x().re
+        rep = guards.check_output(pl, x, pl._execute(x), level="full")
+        assert rep.ok, (kind, inverse, rep)
+        assert abs(rep.checks["parseval_ratio"] - 1.0) < 1e-4
+
+
+def test_guards_catch_each_corruption_class():
+    pl = P.get_plan((64, 64), kind="rfft", backend="jnp")
+    x = _x().re
+    y = pl._execute(x)
+    # NaN poison -> finite check
+    bad = SplitComplex(y.re.at[0, 0].set(jnp.nan), y.im)
+    assert "finite" in guards.check_output(pl, x, bad, level="full").reason
+    # scaled payload stays finite -> Parseval catches it
+    bad = SplitComplex(y.re * 1.5, y.im * 1.5)
+    assert "Parseval" in guards.check_output(pl, x, bad, level="full").reason
+    # symmetry break in the DC column, too small for Parseval to see
+    bad = SplitComplex(y.re, y.im.at[1, 0].add(0.5 * float(
+        jnp.max(jnp.abs(y.re)))))
+    rep = guards.check_output(pl, x, bad, level="full")
+    assert not rep.ok and "Hermitian" in rep.reason
+    # basic level only scans for NaN/Inf: the scaled payload slips through
+    assert guards.check_output(pl, x, SplitComplex(y.re * 1.5, y.im * 1.5),
+                               level="basic").ok
+
+
+def test_config_validation_and_overrides():
+    with pytest.raises(KeyError):
+        rconfig.configure(bogus=1)
+    with pytest.raises(ValueError):
+        rconfig.configure(guard_level="extreme")
+    before = rconfig.get("failure_threshold")
+    with rconfig.overrides(failure_threshold=9):
+        assert rconfig.get("failure_threshold") == 9
+    assert rconfig.get("failure_threshold") == before
+
+
+# ---------------------------------------------------------------------------
+# Guarded executor + circuit breaker (the deterministic lifecycle)
+# ---------------------------------------------------------------------------
+
+def test_breaker_demote_halfopen_repromote_cycle():
+    """The acceptance-criterion lifecycle, fully call-counted: K failures
+    open the circuit and demote the registry key; cooldown_calls
+    short-circuited calls later the half-open probe re-promotes it."""
+    rconfig.configure(failure_threshold=2, cooldown_calls=2)
+    pl = P.get_plan((64, 64), backend="pallas")
+    x = _x()
+    ref = P.get_plan((64, 64), backend="jnp")._execute(x)
+    key = _key()
+
+    with faults.inject("plan.execute", "error", times=None):
+        for _ in range(2):                      # K consecutive failures
+            y = pl(x)                           # fallback serves the call
+            np.testing.assert_allclose(np.asarray(y.re), np.asarray(ref.re))
+    assert policy.breaker_state(key) == "open"
+    demoted = P.get_plan((64, 64), backend="pallas")
+    assert demoted.backend == "jnp"
+    assert demoted.demote_reason == RUNTIME_DEMOTE_REASON
+
+    pl2 = P.get_plan((64, 64), backend="pallas")   # a post-demotion holder
+    pl2(x)                                      # cooldown call 1 (short)
+    assert policy.breaker_state(key) == "open"
+    pl2(x)                                      # call 2 -> half-open probe
+    assert policy.breaker_state(key) == "closed"
+    restored = P.get_plan((64, 64), backend="pallas")
+    assert restored.backend == "pallas" and restored.demote_reason is None
+    br = policy.breaker(key)
+    assert br.transitions == ["open", "half_open", "closed"]
+    st = executor.stats(key)
+    assert st["failures"] == 2 and st["short_circuits"] == 1
+
+
+def test_breaker_failed_probe_reopens():
+    rconfig.configure(failure_threshold=1, cooldown_calls=1)
+    pl = P.get_plan((64, 64), backend="pallas")
+    x = _x()
+    with faults.inject("plan.execute", "error", times=3):
+        pl(x)                                   # failure -> open
+        assert policy.breaker_state(_key()) == "open"
+        pl(x)                                   # cooldown -> half-open probe
+        # the probe itself failed (fault still armed) -> re-open
+        assert policy.breaker_state(_key()) == "open"
+    assert policy.breaker(_key()).transitions == \
+        ["open", "half_open", "open"]
+    pl(x)                                       # cooldown again
+    assert policy.breaker_state(_key()) == "closed"
+    assert P.get_plan((64, 64), backend="pallas").backend == "pallas"
+
+
+def test_guard_violation_falls_back_with_correct_result():
+    # full guards: Parseval is what catches the finite corruptions
+    # (scale/drop); threshold high enough to keep the circuit closed
+    rconfig.configure(failure_threshold=10, guard_level="full")
+    pl = P.get_plan((64, 64), backend="pallas")
+    x = _x()
+    ref = P.get_plan((64, 64), backend="jnp")._execute(x)
+    for kind in ("nan", "inf", "corrupt", "drop"):
+        with faults.inject("plan.output", kind):
+            y = pl(x)
+        # recovered result is the jnp schedule's: matches fault-free ref
+        np.testing.assert_allclose(np.asarray(y.re), np.asarray(ref.re))
+        np.testing.assert_allclose(np.asarray(y.im), np.asarray(ref.im))
+    assert executor.stats(_key())["fallbacks"] == 4
+
+
+def test_traced_execution_bypasses_guards():
+    """jit'd bodies must never consult fault sites or pay for guards —
+    the site would be baked into the trace cache."""
+    pl = P.get_plan((64, 64), backend="pallas")
+    fn = jax.jit(lambda q: pl(q))
+    x = _x()
+    with FaultPlan().add("plan.execute", "error", times=None) as fp:
+        y = fn(x)
+    assert fp.fired() == 0
+    assert bool(jnp.isfinite(y.re).all())
+
+
+def test_disabled_resilience_is_passthrough():
+    rconfig.configure(enabled=False)
+    pl = P.get_plan((64, 64), backend="pallas")
+    with FaultPlan().add("plan.execute", "error", times=None) as fp:
+        y = pl(_x())
+    assert fp.fired() == 0 and bool(jnp.isfinite(y.re).all())
+    assert executor.stats(_key()) == {"attempts": 0, "failures": 0,
+                                      "fallbacks": 0, "short_circuits": 0,
+                                      "last_reason": None}
+
+
+# ---------------------------------------------------------------------------
+# Autotune watchdog
+# ---------------------------------------------------------------------------
+
+def test_autotune_watchdog_excludes_hung_candidate():
+    rconfig.configure(measure_timeout_s=0.6)
+    with faults.inject("autotune.measure", "hang", duration=2.0,
+                       tag="four_step", times=None):
+        pl = P.get_plan((64,), backend="jnp", tune=True)
+    assert pl.tuned
+    assert "four_step" in pl.tune_report["timeouts"]
+    assert pl.tune_report["four_step"] == "timeout"
+    assert pl.tune_report["winner"] != "four_step"
+    assert pl.algo != "four_step"              # a hanger can never win
+    # the non-hanging candidates were still measured normally
+    measured = [v for k, v in pl.tune_report.items()
+                if isinstance(v, float)]
+    assert measured and all(v > 0 for v in measured)
+
+
+def test_autotune_all_candidates_hang_keeps_default():
+    rconfig.configure(measure_timeout_s=0.4)
+    with faults.inject("autotune.measure", "hang", duration=2.0,
+                       times=None):
+        pl = P.get_plan((32,), backend="jnp", tune=True)
+    assert pl.tuned and pl.tune_report["winner"] == "default/untimed"
+    # the heuristic default config survived untouched
+    assert pl.block_batch == 8
+
+
+def test_watchdog_propagates_worker_exceptions():
+    with pytest.raises(ZeroDivisionError):
+        P._watchdog_call(lambda: 1 / 0, timeout_s=5.0)
+    assert P._watchdog_call(lambda: 42, timeout_s=5.0) == 42
+    with pytest.raises(P.CandidateTimeout):
+        P._watchdog_call(lambda: __import__("time").sleep(2), timeout_s=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Serving: degraded pre-warm + per-request deadlines
+# ---------------------------------------------------------------------------
+
+def _fourier_cfg():
+    import repro.configs as C
+    return C.get_config("fnet_demo").reduced()
+
+
+def _engine(clock=None, scfg=None):
+    from repro.models import model as M
+    from repro.serve.engine import Engine, ServeConfig
+    cfg = _fourier_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return Engine(cfg, scfg or ServeConfig(batch_size=2, max_len=64),
+                  params, clock=clock)
+
+
+def test_engine_degrades_instead_of_crashing_on_prewarm_failure():
+    with faults.inject("serve.prewarm", "error"):
+        eng = _engine()
+    assert eng.degraded
+    assert "FaultInjected" in eng.degrade_reason
+    out = eng.run([(0, np.asarray([5, 6, 7], np.int32))], max_new=2)
+    assert list(out) == [0] and len(out[0]) == 3   # still serves
+
+
+def test_engine_not_degraded_normally():
+    eng = _engine()
+    assert not eng.degraded and eng.degrade_reason is None
+
+
+def test_engine_honours_per_request_deadlines():
+    t = {"v": 0.0}
+    eng = _engine(clock=lambda: t["v"])
+    prompt = np.asarray([5, 6, 7], np.int32)
+    assert eng.add_request(0, prompt, deadline_s=2.5)   # expires at t=2.5
+    assert eng.add_request(1, prompt)                   # no deadline
+    for _ in range(6):
+        t["v"] += 1.0
+        eng.step(max_new=6)
+    assert eng.timed_out == {0}
+    assert len(eng.finished[0]) < 1 + 6       # cut short, partial kept
+    assert len(eng.finished[1]) == 1 + 6      # undeadlined ran to max_new
+
+
+# ---------------------------------------------------------------------------
+# Wisdom: atomic save + crash simulation + observable autoload failure
+# ---------------------------------------------------------------------------
+
+def test_save_wisdom_is_atomic_under_crash(tmp_path):
+    path = str(tmp_path / "wisdom.json")
+    P.get_plan((256,), tune=True)
+    assert P.save_wisdom(path) == 1
+    good = open(path).read()
+    json.loads(good)                           # valid on disk
+
+    # crash mid-write over the existing file: the fault fires after half
+    # the payload is written to the temp file
+    with faults.inject("wisdom.save", "error"):
+        with pytest.raises(FaultInjected):
+            P.save_wisdom(path)
+    assert open(path).read() == good           # target untouched, not torn
+    P.clear_plan_cache()
+    assert P.load_wisdom(path) == 1
+
+    # crash on first-ever save: no destination file appears at all
+    fresh = str(tmp_path / "fresh.json")
+    with faults.inject("wisdom.save", "error"):
+        with pytest.raises(FaultInjected):
+            P.save_wisdom(fresh)
+    assert not os.path.exists(fresh)
+
+
+def _import_plan_with_wisdom(path):
+    code = "import repro.core.plan as P; print('LOADED', P.WISDOM_AUTOLOADED)"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["REPRO_FFT_WISDOM"] = path
+    env["PYTHONWARNINGS"] = "always"
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr   # import must never break
+    return proc
+
+
+def test_autoload_warns_on_corrupt_wisdom_file(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as fh:
+        fh.write("{this is not json")
+    proc = _import_plan_with_wisdom(path)
+    assert "LOADED 0" in proc.stdout
+    assert "REPRO_FFT_WISDOM" in proc.stderr
+    assert "JSONDecodeError" in proc.stderr
+    assert path in proc.stderr                 # names the offending file
+
+
+def test_autoload_warns_on_version_mismatch(tmp_path):
+    path = str(tmp_path / "old.json")
+    json.dump({"version": 999, "entries": []}, open(path, "w"))
+    proc = _import_plan_with_wisdom(path)
+    assert "LOADED 0" in proc.stdout
+    assert "version" in proc.stderr and "999" in proc.stderr
+
+
+def test_autoload_silent_on_legitimate_empty_wisdom(tmp_path):
+    path = str(tmp_path / "empty.json")
+    json.dump({"version": P.WISDOM_VERSION, "entries": []}, open(path, "w"))
+    proc = _import_plan_with_wisdom(path)
+    assert "LOADED 0" in proc.stdout
+    assert "REPRO_FFT_WISDOM" not in proc.stderr

@@ -75,3 +75,79 @@ def test_should_eject():
     assert idx == [3]
     idx, _ = should_eject([1.0, 1.1, 0.9, 1.2], eject_threshold=3.0)
     assert idx == []
+
+
+# ---------------------------------------------------------------------------
+# Edge cases under seeded fault injection (repro.resilience.faults)
+# ---------------------------------------------------------------------------
+
+def test_single_shard_mesh():
+    """One host: it gets everything, and can never be ejected (it IS the
+    median)."""
+    assert rebalance([1.7], 5) == [5]
+    assert rebalance([1.7], 1) == [1]
+    idx, med = should_eject([1.7], eject_threshold=3.0)
+    assert idx == [] and med == 1.7
+
+
+def test_all_equal_timings_with_injected_straggler():
+    """All-equal gossip splits uniformly; a fault-injected slowdown on the
+    last host deterministically shifts its work to the others."""
+    from repro.resilience import faults
+
+    base = [2.0, 2.0, 2.0, 2.0]
+    assert rebalance(base, 17)[:3] == [5, 4, 4]      # remainder by index
+
+    def round_assign():
+        times = list(base)
+        times[-1] = faults.scaled("straggler.times", times[-1])
+        return rebalance(times, 16), should_eject(times)[0]
+
+    with faults.inject("straggler.times", "slow", scale=8.0, times=None):
+        a, ejected = round_assign()
+    assert a[-1] == 1 and sum(a) == 16               # starved, never zero
+    assert all(v > a[-1] for v in a[:-1])
+    assert ejected == [3]                            # 8x > 3x median
+
+
+def test_empty_smoothing_history_defaults_to_uniform_prior():
+    """smoothing < 1 with no prev_assignment must blend against the
+    uniform prior, not crash or bias toward any host."""
+    times = [1.0, 1.0, 1.0, 4.0]
+    a = rebalance(times, 16, smoothing=0.5, prev_assignment=None)
+    assert sum(a) == 16 and min(a) >= 1
+    sharp = rebalance(times, 16, smoothing=1.0)
+    assert a[3] >= sharp[3]          # uniform prior damps the swing
+    # smoothing -> 0 degenerates to (almost) the uniform prior itself
+    near_uniform = rebalance(times, 16, smoothing=1e-6,
+                             prev_assignment=None)
+    assert max(near_uniform) - min(near_uniform) <= 1
+
+
+def test_ejection_flapping_is_deterministic_and_bounded():
+    """A host oscillating around the threshold (seeded prob < 1 fault)
+    produces an identical ejection sequence on identical runs, and is
+    only ever flagged in rounds where the fault actually fired."""
+    from repro.resilience.faults import FaultPlan
+
+    def run():
+        decisions, fired = [], []
+        fp = FaultPlan(seed=11).add("straggler.times", "slow",
+                                    prob=0.5, times=None, scale=6.0)
+        with fp:
+            from repro.resilience import faults
+            for _ in range(12):
+                t3 = faults.scaled("straggler.times", 1.2)
+                fired.append(t3 > 1.2)
+                idx, _ = should_eject([1.0, 1.1, 0.9, t3],
+                                      eject_threshold=3.0)
+                decisions.append(tuple(idx))
+        return decisions, fired
+
+    d1, f1 = run()
+    d2, f2 = run()
+    assert (d1, f1) == (d2, f2)      # seeded: no flaky ejection flapping
+    assert set(d1) == {(), (3,)}     # flaps, but only host 3, never others
+    assert 0 < sum(f1) < 12          # both states actually occur
+    # ejected exactly when (and only when) the fault fired that round
+    assert all(d == ((3,) if f else ()) for d, f in zip(d1, f1))

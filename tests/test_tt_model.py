@@ -176,7 +176,7 @@ def test_ranking_consistency_predicted_vs_measured(size, batch):
     shp = (batch, size, size)
     x = SplitComplex(jnp.asarray(rng.standard_normal(shp), jnp.float32),
                      jnp.asarray(rng.standard_normal(shp), jnp.float32))
-    measured = _time_candidates(cands, x, iters=3)
+    measured, _ = _time_candidates(cands, x, iters=3)
     measured_order = np.argsort(measured).tolist()
     for arch in ("wormhole_n300", "tpu_v5e"):
         predicted = [tttrace.predict_cost(p, arch=arch, batch=batch)
