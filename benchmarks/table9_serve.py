@@ -1,0 +1,213 @@
+"""Table 9 — spectral serving: continuous batching vs serial dispatch,
+offered-QPS sweep, pre-warm cold-start, and prewarm-fault degrade.
+
+Four sections land in BENCH_serve.json:
+
+- ``batched_vs_serial``: the acceptance A/B.  The same closed-loop request
+  mix runs through one :class:`~repro.serve.spectral.SpectralServer` at
+  full concurrency (continuous batching fills dispatch slots) and at
+  concurrency 1 (every request pays a whole ``max_batch``-padded dispatch
+  alone).  Runs interleave A/B/A/B... so machine-load drift cancels; the
+  full run asserts batched throughput >= 1.3x serial.
+- ``qps_sweep``: open-loop (Poisson arrivals) at increasing offered QPS;
+  achieved QPS + p50/p99 per point — the knee where queueing delay takes
+  over p99 is visible in the committed numbers.
+- ``prewarm``: per-request latency of the first requests into a fresh
+  server with and without startup pre-warm.  Without it the first request
+  of every bucket pays XLA compilation inline (cold p99); the full run
+  asserts pre-warm cuts cold p99 by >= 2x.
+- ``fault_degrade``: a ``serve.prewarm`` fault injected at startup — the
+  server must come up degraded (jnp twin) with no crash and serve spectra
+  identical to a healthy server's (max_rel_err <= 1e-6, asserted always:
+  a wrong answer from the degrade path is a silent corruption).
+
+Usage: ``python -m benchmarks.table9_serve [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.complexmath import SplitComplex
+from repro.resilience import faults
+from repro.serve.spectral import (BucketConfig, MixItem, SpectralServer,
+                                  closed_loop, open_loop)
+
+from .common import write_json
+
+BENCH_JSON = "BENCH_serve.json"
+
+
+def _buckets(smoke: bool):
+    shape = (64, 64) if smoke else (128, 128)
+    return [BucketConfig(shape, kind="c2c"),
+            BucketConfig(shape, kind="rfft")], \
+        [MixItem(shape, "c2c"), MixItem(shape, "rfft")]
+
+
+# -- batched vs serial -------------------------------------------------------
+
+
+def batched_vs_serial(smoke: bool) -> dict:
+    buckets, mix = _buckets(smoke)
+    requests = 32 if smoke else 96
+    iters = 2 if smoke else 5
+    qa, qb = [], []
+    with SpectralServer(buckets) as srv:
+        conc = srv.states[buckets[0].label].cfg.max_batch * 2
+        closed_loop(srv, mix, requests=requests, concurrency=conc,
+                    seed=99)                      # warm both paths
+        for i in range(iters):                    # interleaved A/B
+            a = closed_loop(srv, mix, requests=requests, concurrency=conc,
+                            seed=2 * i, rid_prefix=f"a{i}")
+            b = closed_loop(srv, mix, requests=requests, concurrency=1,
+                            seed=2 * i + 1, rid_prefix=f"b{i}")
+            qa.append(a["achieved_qps"])
+            qb.append(b["achieved_qps"])
+        occ = srv.snapshot()["buckets"][buckets[0].label][
+            "gauges"]["batch_occupancy"]["mean"]
+    batched, serial = float(np.median(qa)), float(np.median(qb))
+    row = {"requests": requests, "concurrency": conc, "iters": iters,
+           "batched_qps": batched, "serial_qps": serial,
+           "speedup": batched / serial, "mean_batch_occupancy": occ}
+    print(f"table9/batched_vs_serial,batched={batched:.1f}qps,"
+          f"serial={serial:.1f}qps,speedup={row['speedup']:.2f}x")
+    return row
+
+
+# -- offered-QPS sweep -------------------------------------------------------
+
+
+def qps_sweep(smoke: bool) -> list:
+    buckets, mix = _buckets(smoke)
+    points = [50, 200] if smoke else [50, 100, 200, 400, 800]
+    duration = 0.5 if smoke else 2.0
+    rows = []
+    with SpectralServer(buckets) as srv:
+        for qps in points:
+            r = open_loop(srv, mix, qps=float(qps), duration_s=duration,
+                          seed=qps, rid_prefix=f"q{qps}")
+            rows.append({k: r[k] for k in
+                         ("offered_qps", "achieved_qps", "completed",
+                          "rejected", "timed_out", "p50_ms", "p99_ms")})
+            print(f"table9/qps_sweep,offered={qps},"
+                  f"achieved={r['achieved_qps']:.1f},"
+                  f"p50={r['p50_ms']:.1f}ms,p99={r['p99_ms']:.1f}ms")
+    return rows
+
+
+# -- pre-warm cold start -----------------------------------------------------
+
+
+def _first_request_p99(buckets, mix, *, prewarm: bool, seed: int) -> dict:
+    """Latency stats of the first requests into a *fresh* server."""
+    rng = np.random.default_rng(seed)
+    lat = []
+    with SpectralServer(buckets, prewarm=prewarm) as srv:
+        for i, item in enumerate(mix * 4):      # few per bucket
+            shape = tuple(item.shape)
+            if item.kind == "rfft":
+                payload = rng.standard_normal(shape).astype(np.float32)
+            else:
+                payload = SplitComplex(
+                    rng.standard_normal(shape).astype(np.float32),
+                    rng.standard_normal(shape).astype(np.float32))
+            t0 = time.perf_counter()
+            srv.submit(f"w{i}", payload, kind=item.kind)
+            rec = srv.result(f"w{i}", timeout=180)
+            assert rec is not None and rec.status == "completed"
+            lat.append(time.perf_counter() - t0)
+        report = srv.prewarm_report
+    return {"p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "max_ms": float(np.max(lat) * 1e3),
+            "prewarm_total_s": report.total_s if report else None}
+
+
+def prewarm_cold_start(smoke: bool) -> dict:
+    buckets, mix = _buckets(smoke)
+    cold = _first_request_p99(buckets, mix, prewarm=False, seed=5)
+    warm = _first_request_p99(buckets, mix, prewarm=True, seed=6)
+    row = {"cold_p99_ms": cold["p99_ms"], "cold_max_ms": cold["max_ms"],
+           "warm_p99_ms": warm["p99_ms"], "warm_max_ms": warm["max_ms"],
+           "prewarm_total_s": warm["prewarm_total_s"],
+           "cold_over_warm": cold["p99_ms"] / max(warm["p99_ms"], 1e-9)}
+    print(f"table9/prewarm,cold_p99={cold['p99_ms']:.1f}ms,"
+          f"warm_p99={warm['p99_ms']:.1f}ms,"
+          f"ratio={row['cold_over_warm']:.1f}x,"
+          f"prewarm={row['prewarm_total_s']:.2f}s")
+    return row
+
+
+# -- prewarm-fault degrade ---------------------------------------------------
+
+
+def fault_degrade(smoke: bool) -> dict:
+    buckets, _ = _buckets(smoke)
+    shape = buckets[0].shape
+    rng = np.random.default_rng(7)
+    x = SplitComplex(rng.standard_normal(shape).astype(np.float32),
+                     rng.standard_normal(shape).astype(np.float32))
+    with SpectralServer([buckets[0]]) as healthy:
+        healthy.submit("r", x)
+        ref = healthy.result("r", timeout=120).value
+    crashed = False
+    try:
+        with faults.inject("serve.prewarm", "error", times=None):
+            srv = SpectralServer([buckets[0]])
+    except Exception:       # noqa: BLE001 — the thing we are measuring
+        crashed = True
+        srv = None
+    if crashed:
+        row = {"crashed": True}
+    else:
+        with srv:
+            degraded = srv.degraded_buckets
+            srv.submit("r", x)
+            got = srv.result("r", timeout=120).value
+        num = max(float(np.max(np.abs(np.asarray(got.re)
+                                      - np.asarray(ref.re)))),
+                  float(np.max(np.abs(np.asarray(got.im)
+                                      - np.asarray(ref.im)))))
+        den = max(float(np.max(np.abs(np.asarray(ref.re)))),
+                  float(np.max(np.abs(np.asarray(ref.im)))))
+        row = {"crashed": False, "degraded_buckets": degraded,
+               "max_rel_err": num / den}
+    print(f"table9/fault_degrade,crashed={row['crashed']},"
+          f"degraded={row.get('degraded_buckets')},"
+          f"err={row.get('max_rel_err')}")
+    return row
+
+
+# -- driver ------------------------------------------------------------------
+
+
+def run(smoke: bool = False) -> dict:
+    payload = {"smoke": smoke}
+    payload["batched_vs_serial"] = batched_vs_serial(smoke)
+    payload["qps_sweep"] = qps_sweep(smoke)
+    payload["prewarm"] = prewarm_cold_start(smoke)
+    payload["fault_degrade"] = fault_degrade(smoke)
+
+    fd = payload["fault_degrade"]
+    assert not fd["crashed"], "prewarm fault crashed the server"
+    assert fd["max_rel_err"] <= 1e-6, \
+        f"degrade path changed the math: rel_err={fd['max_rel_err']}"
+    assert fd["degraded_buckets"], "fault injected but nothing degraded"
+    if not smoke:
+        sp = payload["batched_vs_serial"]["speedup"]
+        assert sp >= 1.3, f"batched speedup {sp:.2f}x < 1.3x"
+        ratio = payload["prewarm"]["cold_over_warm"]
+        assert ratio >= 2.0, \
+            f"pre-warm should cut cold p99 >= 2x, got {ratio:.1f}x"
+    write_json(BENCH_JSON, "serve", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI smoke runs")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

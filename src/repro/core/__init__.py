@@ -16,4 +16,5 @@ from .fftconv import fft_conv, circular_conv
 from .spectral import fourier_mix
 from .plan import (FFTPlan, plan_fft, plan_ifft, plan_fft2, plan_ifft2,
                    get_plan, clear_plan_cache, autotune_count,
-                   plan_cache_size, save_wisdom, load_wisdom)
+                   plan_cache_size, save_wisdom, load_wisdom, warm,
+                   WarmResult)

@@ -364,6 +364,70 @@ def plan_cache_size() -> int:
     return len(_PLAN_CACHE)
 
 
+# -- bulk pre-warm -----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WarmResult:
+    """One key's outcome from :func:`warm`: the plan that will serve it
+    (possibly the jnp twin), whether resolution degraded, and why."""
+    plan: "FFTPlan"
+    requested_backend: str
+    degraded: bool = False
+    reason: Optional[str] = None
+
+
+def warm(keys, *, backend: str = "pallas", tune: bool = False,
+         tune_batch: int = 8, fault_site: Optional[str] = "serve.prewarm",
+         on_error: str = "degrade"):
+    """Bulk-resolve (and optionally tune) N plan keys in one call — the
+    single "compile these plans now or degrade" path shared by the serving
+    pre-warm (:mod:`repro.serve.spectral.prewarm`) and
+    :class:`repro.serve.engine.Engine`.
+
+    ``keys`` is an iterable of shape tuples or dicts
+    ``{"shape": (h, w), "dtype": ..., "kind": "c2c"|"rfft",
+    "inverse": bool, "backend": ...}`` (dict fields beyond ``shape`` are
+    optional; a per-key ``backend`` overrides the call-wide one).  Each key
+    is consulted at ``fault_site`` (:func:`repro.resilience.faults.check`,
+    tagged ``kind/shape``) before resolution, so injected pre-warm faults
+    exercise the degrade path deterministically.
+
+    A key whose resolution raises — kernel compile failure, injected
+    fault — never takes the others down: with ``on_error="degrade"``
+    (default) it falls back to the always-available jnp schedule and the
+    :class:`WarmResult` records ``degraded=True`` plus the reason;
+    ``on_error="raise"`` propagates instead.  Results come back in input
+    order.
+    """
+    assert on_error in ("degrade", "raise"), on_error
+    from repro.resilience import faults as _faults
+    out = []
+    for spec in keys:
+        if not isinstance(spec, dict):
+            spec = {"shape": spec}
+        shape = tuple(int(d) for d in spec["shape"])
+        kw = dict(dtype=spec.get("dtype", jnp.float32),
+                  inverse=bool(spec.get("inverse", False)),
+                  kind=spec.get("kind", "c2c"))
+        bk = spec.get("backend", backend)
+        tag = f"{kw['kind']}/{'x'.join(map(str, shape))}"
+        try:
+            if fault_site:
+                _faults.check(fault_site, tag=tag)
+            plan = get_plan(shape, backend=bk, tune=tune,
+                            tune_batch=spec.get("tune_batch", tune_batch),
+                            **kw)
+            out.append(WarmResult(plan=plan, requested_backend=bk))
+        except Exception as e:      # noqa: BLE001 — degrade, never crash
+            if on_error == "raise":
+                raise
+            plan = get_plan(shape, backend="jnp", **kw)
+            out.append(WarmResult(plan=plan, requested_backend=bk,
+                                  degraded=True,
+                                  reason=f"{type(e).__name__}: {e}"))
+    return out
+
+
 def autotune_count(shape, *, dtype=jnp.float32, inverse: bool = False,
                    backend: str = "jnp", kind: str = "c2c") -> int:
     """How many times the measuring autotuner ran for this key, counting

@@ -1,2 +1,2 @@
 """repro.data — deterministic, checkpointable, host-sharded data pipeline."""
-from .pipeline import DataConfig, SyntheticLM, make_batch_specs
+from .pipeline import DataConfig, Prefetcher, SyntheticLM, make_batch_specs

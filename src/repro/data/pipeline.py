@@ -13,13 +13,95 @@ Produces token (or stub-embedding) batches that are:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import queue
+import threading
+from typing import Iterable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+
+
+class Prefetcher:
+    """Bounded background prefetch over any iterator.
+
+    A daemon thread pulls items from ``src`` into a bounded queue of
+    ``depth`` slots (2 = double buffering), so consumers overlap their own
+    work with the producer's assembly cost — the serving executor's H2D
+    staging stage (:mod:`repro.serve.spectral.executor`) and the training
+    batch iterator both sit on this.  Order is preserved; a producer
+    exception is re-raised at the consumer's ``next()`` (not swallowed on
+    the thread); ``close()`` stops the producer promptly even when the
+    queue is full.
+
+    ``threaded=False`` is the injectable test mode: a plain synchronous
+    passthrough with the identical interface, so pipeline tests can assert
+    behaviour deterministically without thread scheduling in the loop.
+    """
+
+    _DONE = object()
+
+    def __init__(self, src: Iterable, *, depth: int = 2,
+                 threaded: bool = True):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self._src = iter(src)
+        self._threaded = threaded
+        self._closed = False
+        if not threaded:
+            return
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._thread = threading.Thread(target=self._produce, daemon=True,
+                                        name="repro-prefetch")
+        self._thread.start()
+
+    def _produce(self) -> None:
+        try:
+            for item in self._src:
+                while not self._closed:
+                    try:
+                        self._q.put(("item", item), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if self._closed:
+                    return
+            self._q.put((None, self._DONE))
+        except BaseException as e:  # noqa: BLE001 — re-raised at next()
+            self._q.put(("error", e))
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        if not self._threaded:
+            if self._closed:
+                raise StopIteration
+            return next(self._src)
+        kind, item = self._q.get()
+        if item is self._DONE:
+            raise StopIteration
+        if kind == "error":
+            raise item
+        return item
+
+    def close(self) -> None:
+        """Stop prefetching; the producer thread exits at its next put."""
+        self._closed = True
+        if self._threaded:
+            while True:             # unblock a full-queue producer
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +148,27 @@ class SyntheticLM:
             return {"embeds": jnp.asarray(embeds, jnp.dtype(m.dtype)),
                     "labels": labels}
         return {"tokens": tokens, "labels": labels}
+
+    def iter_batches(self, start_step: int = 0, *, num_steps: int = None,
+                     host_id: int = 0, num_hosts: int = 1,
+                     prefetch_depth: int = 2,
+                     threaded: bool = True) -> Prefetcher:
+        """Streaming batch iterator with bounded background prefetch.
+
+        Yields ``(step, batch)`` pairs from ``start_step`` (restart-safe:
+        resume by passing the checkpointed step).  Batch assembly — the
+        numpy Zipf draw plus copy-structure injection in :meth:`batch_at` —
+        runs on the prefetch thread, overlapped with the consumer's device
+        step, instead of synchronously on the training loop's critical
+        path.  ``threaded=False`` degrades to a synchronous passthrough
+        (deterministic tests)."""
+        def gen():
+            step = start_step
+            while num_steps is None or step < start_step + num_steps:
+                yield step, self.batch_at(step, host_id=host_id,
+                                          num_hosts=num_hosts)
+                step += 1
+        return Prefetcher(gen(), depth=prefetch_depth, threaded=threaded)
 
     def checkpoint_state(self, step: int) -> dict:
         return {"step": step, "seed": self.dcfg.seed}

@@ -1,2 +1,10 @@
-"""repro.serve — prefill/decode engine with a batched request scheduler."""
+"""repro.serve — serving layer.
+
+- :mod:`repro.serve.engine`: the LM prefill/decode engine with a batched
+  slot scheduler.
+- :mod:`repro.serve.spectral`: continuous-batching spectral serving —
+  shape-bucket scheduling over the plan registry, async host<->device
+  pipelining, startup pre-warm, per-bucket metrics, and a load generator.
+"""
 from .engine import ServeConfig, Engine
+from . import spectral

@@ -70,25 +70,24 @@ class Engine:
         seq-axis key depends on the runtime sequence length (1 per decode
         step, prompt length at prefill), so it resolves lazily on first use.
 
-        Pre-warm failure must never kill the engine: a raising plan
-        resolution (kernel compile failure, injected ``serve.prewarm``
-        fault) degrades the engine to the always-available jnp schedule —
-        ``self.degraded`` flips and ``self.degrade_reason`` says why — and
-        serving proceeds at reduced throughput instead of crashing."""
+        The compile-or-degrade semantics live in
+        :func:`repro.core.plan.warm` (shared with the spectral server's
+        bucket pre-warm): a raising plan resolution (kernel compile
+        failure, injected ``serve.prewarm`` fault) degrades the engine to
+        the always-available jnp schedule — ``self.degraded`` flips and
+        ``self.degrade_reason`` says why — and serving proceeds at reduced
+        throughput instead of crashing."""
         cfg = self.cfg
         uses_fourier = (cfg.token_mixing == "fourier"
                         or any("fourier" in b for b in cfg.block_pattern))
         if not uses_fourier:
             return
-        try:
-            _faults.check("serve.prewarm", tag=f"d_model={cfg.d_model}")
-            fftplan.get_plan((cfg.d_model,), dtype=jnp.dtype(cfg.dtype),
-                             backend=self.scfg.fft_backend)
-        except Exception as e:        # noqa: BLE001 — degrade, never crash
+        res = fftplan.warm([{"shape": (cfg.d_model,),
+                             "dtype": jnp.dtype(cfg.dtype)}],
+                           backend=self.scfg.fft_backend)[0]
+        if res.degraded:
             self.degraded = True
-            self.degrade_reason = f"{type(e).__name__}: {e}"
-            fftplan.get_plan((cfg.d_model,), dtype=jnp.dtype(cfg.dtype),
-                             backend="jnp")
+            self.degrade_reason = res.reason
 
     # -- request lifecycle ---------------------------------------------------
 

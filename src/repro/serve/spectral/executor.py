@@ -1,0 +1,334 @@
+"""Async host↔device pipelining: staging → dispatch → drain.
+
+Three stages, double-buffered through bounded queues, mirroring the
+paper's decoupling of data movement from compute on the Tensix — device
+dispatch never waits on host-side batch assembly:
+
+1. **Staging** (host): pull a batch from the scheduler, stack/pad payloads
+   into the bucket's fixed ``(max_batch, *shape)`` geometry, and
+   ``device_put`` the planes.  Runs on the :class:`repro.data.Prefetcher`
+   thread — the same bounded prefetch primitive the training data pipeline
+   uses — with ``depth`` in-flight batches (2 = double buffering), so
+   backpressure propagates from the device up to admission.
+2. **Dispatch**: consult the ``serve.step`` fault site, then call the
+   bucket's jitted plan.  JAX dispatch is async, so this thread hands the
+   in-flight computation straight to the drain queue.
+3. **Drain** (host): ``block_until_ready``, pull results back as numpy,
+   check in-flight deadlines, and complete each request.
+
+Every batch is padded to the bucket's ``max_batch`` so each bucket
+compiles exactly one XLA program — batch-size churn can never trigger
+recompiles on the hot path (occupancy is visible in the
+``batch_occupancy`` gauge instead).  A dispatch failure degrades the
+bucket to its jnp twin plan (once) and retries, mirroring the pre-warm
+degrade semantics; the requests still complete.
+
+``threaded=False`` runs the identical stage functions inline through
+:meth:`PipelinedExecutor.step` — fully deterministic for the scheduler
+edge-case tests (injectable clocks, fault sites) with zero thread
+scheduling in the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as plan_lib
+from repro.core.complexmath import SplitComplex
+from repro.data.pipeline import Prefetcher
+from repro.resilience import faults as _faults
+
+from .scheduler import BucketConfig, Request, ShapeBucketScheduler
+
+
+@dataclasses.dataclass
+class BucketState:
+    """A bucket plus its resolved plan and compiled dispatch function."""
+    cfg: BucketConfig                  # max_batch resolved (never None)
+    plan: plan_lib.FFTPlan
+    requested_backend: str
+    fn: Optional[Callable] = None      # jitted; built at pre-warm/first use
+    degraded: bool = False
+    reason: Optional[str] = None
+
+    @property
+    def label(self) -> str:
+        return self.cfg.label
+
+
+def derive_max_batch(cfg: BucketConfig, plan: plan_lib.FFTPlan) -> int:
+    """The compiled batch size: the configured ``max_batch``, or at least
+    8 rounded up to a multiple of the tuned plan's ``block_batch`` so the
+    kernel's own batch tiling never pads internally."""
+    if cfg.max_batch is not None:
+        return cfg.max_batch
+    bb = max(1, plan.block_batch)
+    return ((max(8, bb) + bb - 1) // bb) * bb
+
+
+def make_fn(state: BucketState) -> Callable:
+    """The bucket's dispatch function: one jit per bucket, compiled for
+    the fixed ``(max_batch, *shape)`` geometry."""
+    plan = state.plan
+    return jax.jit(lambda x, p=plan: p(x))
+
+
+def zeros_input(cfg: BucketConfig, max_batch: int):
+    """A zero input of the bucket's compiled geometry (pre-warm and
+    compile-cache warm-up)."""
+    dt = jnp.dtype(cfg.dtype)
+    shape = (max_batch,) + cfg.shape
+    if cfg.kind == "rfft":
+        if cfg.inverse:
+            half = shape[:-1] + (cfg.shape[-1] // 2 + 1,)
+            return SplitComplex(jnp.zeros(half, dt), jnp.zeros(half, dt))
+        return jnp.zeros(shape, dt)
+    return SplitComplex(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def _payload_planes(req: Request) -> List[np.ndarray]:
+    """The host-side planes of a request payload: [re, im] for complex
+    inputs, [x] for real ones."""
+    p = req.payload
+    if isinstance(p, SplitComplex):
+        return [np.asarray(p.re), np.asarray(p.im)]
+    arr = np.asarray(p)
+    if np.iscomplexobj(arr):
+        return [np.ascontiguousarray(arr.real),
+                np.ascontiguousarray(arr.imag)]
+    return [arr]
+
+
+def _input_is_complex(cfg: BucketConfig) -> bool:
+    return cfg.kind == "c2c" or (cfg.kind == "rfft" and cfg.inverse)
+
+
+@dataclasses.dataclass
+class Assembled:
+    """One staged batch: device-resident input planes + its requests."""
+    state: BucketState
+    requests: List[Request]
+    x: object                          # SplitComplex or ndarray (device)
+    t_staged: float = 0.0
+
+
+class PipelinedExecutor:
+    """Drive scheduler batches through staging/dispatch/drain.
+
+    ``complete(req, status, value, t_done)`` is the server's completion
+    callback (status: "completed" | "timed_out_inflight"); the executor
+    never touches result bookkeeping itself.
+    """
+
+    def __init__(self, states: Dict[str, BucketState],
+                 scheduler: ShapeBucketScheduler, metrics, complete,
+                 *, depth: int = 2, threaded: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.states = states
+        self.scheduler = scheduler
+        self.metrics = metrics
+        self._complete = complete
+        self._depth = depth
+        self._threaded = threaded
+        self._clock = clock
+        self._stop = False
+        self._work = threading.Event()    # pokes the staging loop
+        self._threads: List[threading.Thread] = []
+        self._prefetch: Optional[Prefetcher] = None
+        self._drainq: Optional[queue.Queue] = None
+
+    # -- stage functions (shared by threaded and inline modes) ---------------
+
+    def _assemble(self, bucket: BucketConfig,
+                  reqs: List[Request]) -> Assembled:
+        state = self.states[bucket.label]
+        B = state.cfg.max_batch
+        dt = np.dtype(bucket.dtype)
+        shape = bucket.shape if not (bucket.kind == "rfft" and bucket.inverse)\
+            else bucket.shape[:-1] + (bucket.shape[-1] // 2 + 1,)
+        nplanes = 2 if _input_is_complex(bucket) else 1
+        planes = [np.zeros((B,) + shape, dt) for _ in range(nplanes)]
+        for i, req in enumerate(reqs):
+            src = _payload_planes(req)
+            if len(src) < nplanes:            # real payload into a c2c slot
+                src = src + [np.zeros_like(src[0])]
+            for plane, s in zip(planes, src):
+                # pad-to-bucket: a padded-up request lands in the leading
+                # corner, zeros elsewhere (spectral interpolation)
+                region = tuple(slice(0, d) for d in s.shape)
+                plane[(i,) + region] = s.astype(dt, copy=False)
+        if nplanes == 2:
+            x = SplitComplex(jax.device_put(planes[0]),
+                             jax.device_put(planes[1]))
+        else:
+            x = jax.device_put(planes[0])
+        occupancy = len(reqs) / B
+        self.metrics.inc(bucket.label, "batches")
+        self.metrics.inc(bucket.label, "batch_items", len(reqs))
+        self.metrics.inc(bucket.label, "batch_pad_slots", B - len(reqs))
+        self.metrics.sample(bucket.label, "batch_occupancy", occupancy)
+        now = self._clock()
+        for req in reqs:
+            self.metrics.observe(bucket.label, "queue", now - req.t_submit)
+        return Assembled(state=state, requests=reqs, x=x, t_staged=now)
+
+    def _call_with_degrade(self, state: BucketState, x):
+        """Dispatch on the bucket's plan; one failure degrades the bucket
+        to its jnp twin (registry lookup) and retries — the runtime mirror
+        of the pre-warm degrade path."""
+        if state.fn is None:
+            state.fn = make_fn(state)
+        try:
+            return state.fn(x)
+        except Exception as e:      # noqa: BLE001 — resilience boundary
+            if state.plan.backend == "jnp":
+                raise               # nothing further to degrade to
+            cfg = state.cfg
+            state.plan = plan_lib.get_plan(
+                cfg.shape, dtype=cfg.dtype, inverse=cfg.inverse,
+                kind=cfg.kind, backend="jnp")
+            state.degraded = True
+            state.reason = f"{type(e).__name__}: {e}"
+            state.fn = make_fn(state)
+            self.metrics.annotate(state.label, degraded=True,
+                                  degrade_reason=state.reason)
+            return state.fn(x)
+
+    def _dispatch(self, asm: Assembled):
+        _faults.check("serve.step", tag=asm.state.label)
+        return self._call_with_degrade(asm.state, asm.x)
+
+    def _drain(self, asm: Assembled, y) -> None:
+        jax.block_until_ready(y)
+        if isinstance(y, SplitComplex):
+            planes = [np.asarray(y.re), np.asarray(y.im)]
+            results = [SplitComplex(planes[0][i], planes[1][i])
+                       for i in range(len(asm.requests))]
+        else:
+            host = np.asarray(y)
+            results = [host[i] for i in range(len(asm.requests))]
+        now = self._clock()
+        lbl = asm.state.label
+        fallback = asm.state.plan.backend != asm.state.requested_backend
+        for req, val in zip(asm.requests, results):
+            self.metrics.observe(lbl, "service", now - asm.t_staged)
+            self.metrics.observe(lbl, "e2e", now - req.t_submit)
+            if req.deadline is not None and now >= req.deadline:
+                self.metrics.inc(lbl, "timed_out_inflight")
+                self._complete(req, "timed_out_inflight", None, now)
+                continue
+            self.metrics.inc(lbl, "completed")
+            if fallback:
+                self.metrics.inc(lbl, "fallback_served")
+            self._complete(req, "completed", val, now)
+
+    # -- inline mode ---------------------------------------------------------
+
+    def step(self) -> bool:
+        """Run one batch through all three stages inline; False when the
+        scheduler had nothing to hand out."""
+        sel = self.scheduler.next_batch()
+        if sel is None:
+            return False
+        asm = self._assemble(*sel)
+        y = self._dispatch(asm)
+        self._drain(asm, y)
+        return True
+
+    # -- threaded mode -------------------------------------------------------
+
+    def _staged_batches(self):
+        """Generator the staging Prefetcher thread consumes: blocks until
+        the scheduler has work, yields assembled (device-resident)
+        batches."""
+        while not self._stop:
+            sel = self.scheduler.next_batch()
+            if sel is None:
+                self._work.wait(timeout=0.005)
+                self._work.clear()
+                continue
+            yield self._assemble(*sel)
+
+    def _dispatch_loop(self) -> None:
+        for asm in self._prefetch:
+            try:
+                y = self._dispatch(asm)
+            except BaseException as e:  # noqa: BLE001 — carried to drain
+                y = e
+            self._drainq.put((asm, y))
+        self._drainq.put(None)
+
+    def _drain_loop(self) -> None:
+        while True:
+            item = self._drainq.get()
+            if item is None:
+                return
+            asm, y = item
+            if isinstance(y, BaseException):
+                # dispatch raised even after degrade: requests must still
+                # terminate — nobody may wait forever on a crashed batch
+                now = self._clock()
+                for req in asm.requests:
+                    self._complete(req, "error", y, now)
+                continue
+            self._drain(asm, y)
+
+    def start(self) -> None:
+        if not self._threaded or self._threads:
+            return
+        self._drainq = queue.Queue(maxsize=self._depth)
+        self._prefetch = Prefetcher(self._staged_batches(),
+                                    depth=self._depth)
+        t_disp = threading.Thread(target=self._dispatch_loop, daemon=True,
+                                  name="repro-serve-dispatch")
+        t_drain = threading.Thread(target=self._drain_loop, daemon=True,
+                                   name="repro-serve-drain")
+        self._threads = [t_disp, t_drain]
+        for t in self._threads:
+            t.start()
+
+    def poke(self) -> None:
+        """Wake the staging loop (the server calls this on admission)."""
+        self._work.set()
+
+    def run_pending(self, outstanding: Callable[[], int],
+                    timeout_s: Optional[float] = None) -> bool:
+        """Drive until ``outstanding()`` hits zero.  Inline mode pumps
+        :meth:`step`; threaded mode waits on the pipeline.  Returns False
+        on timeout."""
+        deadline = None if timeout_s is None \
+            else time.monotonic() + timeout_s
+        while outstanding() > 0:
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            if self._threaded:
+                self.poke()
+                time.sleep(0.002)
+            else:
+                if not self.step() and outstanding() > 0:
+                    # nothing schedulable but work still outstanding can
+                    # only mean a sweep retired it concurrently — re-check
+                    if self.scheduler.pending() == 0 and outstanding() > 0:
+                        return False
+        return True
+
+    def shutdown(self) -> None:
+        """Stop the stage threads.  The stop flag ends the staging
+        generator, which ends the Prefetcher (DONE), which ends the
+        dispatch loop (drain sentinel), which ends the drain loop —
+        already-staged batches still flow through and complete, so a
+        shutdown can never orphan admitted work."""
+        self._stop = True
+        self._work.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
