@@ -256,16 +256,35 @@ class PipelinedExecutor:
                 self._work.wait(timeout=0.005)
                 self._work.clear()
                 continue
-            yield self._assemble(*sel)
+            bucket, reqs = sel
+            try:
+                asm = self._assemble(bucket, reqs)
+            except Exception as e:  # noqa: BLE001 — resilience boundary
+                # assembly failed after the batch left the scheduler: the
+                # requests must still terminate (exactly-one-terminal
+                # guarantee), and staging must survive to serve the rest
+                now = self._clock()
+                for req in reqs:
+                    self._complete(req, "error", e, now)
+                continue
+            yield asm
 
     def _dispatch_loop(self) -> None:
-        for asm in self._prefetch:
-            try:
-                y = self._dispatch(asm)
-            except BaseException as e:  # noqa: BLE001 — carried to drain
-                y = e
-            self._drainq.put((asm, y))
-        self._drainq.put(None)
+        try:
+            for asm in self._prefetch:
+                try:
+                    y = self._dispatch(asm)
+                except BaseException as e:  # noqa: BLE001 — to drain
+                    y = e
+                self._drainq.put((asm, y))
+        except BaseException as e:  # noqa: BLE001 — staging died
+            self.metrics.annotate(
+                "_pipeline", staging_error=f"{type(e).__name__}: {e}")
+        finally:
+            # unconditional: a staging error the Prefetcher re-raises at
+            # next() must still release the drain loop, or every queued
+            # request orphans and shutdown() hangs on the joins
+            self._drainq.put(None)
 
     def _drain_loop(self) -> None:
         while True:

@@ -14,7 +14,9 @@ reuses plans across requests — applied at two levels:
 2. **XLA compilation**: each bucket's jitted dispatch function executes
    once on zeros of its fixed ``(max_batch, *shape)`` geometry, so no
    client request ever pays the compile.  A compile/execute failure
-   degrades the bucket (jnp twin, recompile) rather than raising.
+   degrades the bucket (jnp twin, recompile) rather than raising; if even
+   the twin fails, the bucket is recorded as failed in the report and the
+   runtime degrade path retries at first dispatch — startup never crashes.
 
 :func:`compile_states` returns a :class:`PrewarmReport` with per-bucket
 compile seconds and degrade reasons — the benchmark's cold-p99 comparison
@@ -73,14 +75,24 @@ def compile_states(states: Dict[str, BucketState],
             state.fn = make_fn(state)
             jax.block_until_ready(state.fn(x))
         except Exception as e:      # noqa: BLE001 — degrade, never crash
-            cfg = state.cfg
-            state.plan = plan_lib.get_plan(
-                cfg.shape, dtype=cfg.dtype, inverse=cfg.inverse,
-                kind=cfg.kind, backend="jnp")
-            state.degraded = True
-            state.reason = f"{type(e).__name__}: {e}"
-            state.fn = make_fn(state)
-            jax.block_until_ready(state.fn(x))
+            reason = f"{type(e).__name__}: {e}"
+            try:
+                cfg = state.cfg
+                state.plan = plan_lib.get_plan(
+                    cfg.shape, dtype=cfg.dtype, inverse=cfg.inverse,
+                    kind=cfg.kind, backend="jnp")
+                state.degraded = True
+                state.reason = reason
+                state.fn = make_fn(state)
+                jax.block_until_ready(state.fn(x))
+            except Exception as e2:  # noqa: BLE001 — still never crash
+                # even the jnp twin failed to compile/execute: record the
+                # bucket as failed and keep starting up — the runtime
+                # degrade path retries at first dispatch
+                state.degraded = True
+                state.reason = (f"{reason}; jnp twin failed: "
+                                f"{type(e2).__name__}: {e2}")
+                state.fn = None
         compile_s = time.perf_counter() - t0
         entry = PrewarmEntry(
             label=label, backend=state.plan.backend, algo=state.plan.algo,

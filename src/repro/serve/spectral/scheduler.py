@@ -29,11 +29,19 @@ callback before selecting, so a dead request never occupies a batch slot.
 
 The clock is injectable (tests drive a fake clock through admission,
 aging, and expiry deterministically).
+
+Thread safety: in threaded serving, client threads call :meth:`admit`
+while the staging thread calls :meth:`next_batch` — an internal lock
+guards every queue/counter mutation (the expiry sweep's rebuild-and-heapify
+would otherwise silently drop a concurrently pushed request, orphaning
+it).  ``on_timeout`` callbacks fire *outside* the lock so they may safely
+re-enter the scheduler or take the server's own lock.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -132,6 +140,9 @@ class ShapeBucketScheduler:
                                                 for lbl in self.buckets}
         self._pending = 0
         self._seq = 0
+        # guards _queues/_pending/_seq against admit()-vs-next_batch()
+        # races in threaded serving (see module docstring)
+        self._mutex = threading.Lock()
 
     # -- admission -----------------------------------------------------------
 
@@ -166,64 +177,78 @@ class ShapeBucketScheduler:
                 f"configured: {sorted(self.buckets)})")
         req.bucket_label = bucket.label
         req.padded = padded
-        if self._pending >= self.max_queue:
-            return False
-        req.t_submit = self._clock()
-        self._seq += 1
-        req.seq = self._seq
-        # time-invariant heap key: see module docstring
-        key = (-(req.priority - self.aging_rate * req.t_submit), req.seq)
-        heapq.heappush(self._queues[bucket.label], (key, req))
-        self._pending += 1
+        with self._mutex:
+            if self._pending >= self.max_queue:
+                return False
+            req.t_submit = self._clock()
+            self._seq += 1
+            req.seq = self._seq
+            # time-invariant heap key: see module docstring
+            key = (-(req.priority - self.aging_rate * req.t_submit),
+                   req.seq)
+            heapq.heappush(self._queues[bucket.label], (key, req))
+            self._pending += 1
         return True
 
     # -- dispatch ------------------------------------------------------------
 
-    def _sweep_expired(self, now: float) -> None:
+    def _sweep_expired_locked(self, now: float) -> List[Request]:
+        """Retire queued past-deadline requests; the expired list (the
+        caller fires ``on_timeout`` after releasing the lock)."""
+        expired: List[Request] = []
         for q in self._queues.values():
             live = []
             for key, req in q:
                 if req.deadline is not None and now >= req.deadline:
                     self._pending -= 1
-                    if self._on_timeout is not None:
-                        self._on_timeout(req)
+                    expired.append(req)
                 else:
                     live.append((key, req))
             if len(live) != len(q):
                 q[:] = live
                 heapq.heapify(q)
+        return expired
 
     def next_batch(self) -> Optional[Tuple[BucketConfig, List[Request]]]:
         """Retire expired queued requests, then dequeue up to ``max_batch``
         requests from the bucket whose head scores highest right now.
         None when nothing is queued."""
         now = self._clock()
-        self._sweep_expired(now)
-        best_lbl, best_rank = None, None
-        for lbl, q in self._queues.items():
-            if not q:
-                continue
-            head = q[0][1]
-            rank = (head.score(now, self.aging_rate), -head.t_submit,
-                    -head.seq)
-            if best_rank is None or rank > best_rank:
-                best_lbl, best_rank = lbl, rank
-        if best_lbl is None:
-            return None
-        bucket = self.buckets[best_lbl]
-        cap = bucket.max_batch or 8
-        q = self._queues[best_lbl]
-        out = []
-        while q and len(out) < cap:
-            out.append(heapq.heappop(q)[1])
-        self._pending -= len(out)
-        return bucket, out
+        sel = None
+        with self._mutex:
+            expired = self._sweep_expired_locked(now)
+            best_lbl, best_rank = None, None
+            for lbl, q in self._queues.items():
+                if not q:
+                    continue
+                head = q[0][1]
+                rank = (head.score(now, self.aging_rate), -head.t_submit,
+                        -head.seq)
+                if best_rank is None or rank > best_rank:
+                    best_lbl, best_rank = lbl, rank
+            if best_lbl is not None:
+                bucket = self.buckets[best_lbl]
+                cap = bucket.max_batch or 8
+                q = self._queues[best_lbl]
+                out = []
+                while q and len(out) < cap:
+                    out.append(heapq.heappop(q)[1])
+                self._pending -= len(out)
+                sel = (bucket, out)
+        # outside the lock: the server's callback takes its own lock and
+        # may re-enter the scheduler (metrics read queue depths)
+        if self._on_timeout is not None:
+            for req in expired:
+                self._on_timeout(req)
+        return sel
 
     def pending(self) -> int:
-        return self._pending
+        with self._mutex:
+            return self._pending
 
     def queue_depths(self) -> Dict[str, int]:
-        return {lbl: len(q) for lbl, q in self._queues.items()}
+        with self._mutex:
+            return {lbl: len(q) for lbl, q in self._queues.items()}
 
 
 def _numel(shape) -> int:

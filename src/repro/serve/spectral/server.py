@@ -18,7 +18,8 @@
 Request lifecycle: ``submit`` → queued → in-flight → exactly one terminal
 record (completed / timed_out_queued / timed_out_inflight / error), never
 more, never none — ``drain()`` + ``close()`` guarantee zero orphans on
-shutdown.  ``result(rid)`` blocks until that terminal record exists.
+shutdown.  ``result(rid)`` blocks until that terminal record exists, then
+consumes it (records are evicted once read — no per-request leak).
 """
 from __future__ import annotations
 
@@ -235,7 +236,12 @@ class SpectralServer:
     def result(self, rid, timeout: Optional[float] = None
                ) -> Optional[RequestRecord]:
         """Block until ``rid`` reaches a terminal state; its record (None
-        on wall-clock timeout — the request itself is still in flight)."""
+        on wall-clock timeout — the request itself is still in flight).
+
+        Returning the terminal record *consumes* it: the server evicts the
+        bookkeeping (a long-lived server would otherwise leak one record —
+        potentially a full result array — plus an Event per request), and
+        the rid becomes reusable for a fresh submit."""
         with self._lock:
             ev = self._done.get(rid)
         if ev is None:
@@ -243,7 +249,8 @@ class SpectralServer:
         if not ev.wait(timeout):
             return None
         with self._lock:
-            return self._records[rid]
+            self._done.pop(rid, None)
+            return self._records.pop(rid)
 
     def _n_outstanding(self) -> int:
         with self._lock:

@@ -133,6 +133,70 @@ def test_scheduler_deadline_sweep_retires_queued(recwarn):
     assert s.pending() == 0
 
 
+def test_scheduler_on_timeout_fires_outside_lock():
+    """The timeout callback may re-enter the scheduler (the server's
+    completion path reads queue depths): it must run with the internal
+    lock released, or a non-reentrant lock deadlocks here."""
+    clk = FakeClock()
+    seen = []
+    s = ShapeBucketScheduler(
+        [BucketConfig((64, 64), max_batch=4)], clock=clk,
+        on_timeout=lambda r: seen.append((r.rid, s.pending(),
+                                          s.queue_depths())))
+    s.admit(Request(rid="t", payload=None, shape=(64, 64), deadline=1.0))
+    clk.t = 2.0
+    assert s.next_batch() is None
+    assert seen == [("t", 0, {"c2c/f/64x64": 0})]
+
+
+def test_scheduler_threaded_admit_vs_sweep_loses_nothing():
+    """Client threads hammer admit() while a consumer thread sweeps and
+    dequeues: every admitted request comes out exactly once (dispatched
+    or timed out) — the expiry sweep's queue rebuild must not discard a
+    concurrently pushed request, and _pending must not drift."""
+    timed_out = []
+    s = ShapeBucketScheduler([BucketConfig((64, 64), max_batch=4)],
+                             max_queue=100_000,
+                             on_timeout=timed_out.append)
+    n_threads, n_req = 4, 250
+    admitted = [0] * n_threads
+
+    def producer(t):
+        for i in range(n_req):
+            # half pre-expired: every sweep rebuilds the heap, so the
+            # push-vs-rebuild window is exercised constantly
+            dl = time.monotonic() if i % 2 else None
+            if s.admit(Request(rid=(t, i), payload=None, shape=(64, 64),
+                               deadline=dl)):
+                admitted[t] += 1
+
+    dispatched = []
+    stop = threading.Event()
+
+    def consumer():
+        while not stop.is_set() or s.pending():
+            sel = s.next_batch()
+            if sel is not None:
+                dispatched.extend(sel[1])
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    c = threading.Thread(target=consumer)
+    c.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    c.join(timeout=30)
+    assert not c.is_alive()
+    total = sum(admitted)
+    assert len(dispatched) + len(timed_out) == total
+    rids = [r.rid for r in dispatched] + [r.rid for r in timed_out]
+    assert len(set(rids)) == total        # exactly once, no duplicates
+    assert s.pending() == 0
+
+
 # -- metrics -----------------------------------------------------------------
 
 
@@ -395,6 +459,48 @@ def test_threaded_drain_on_shutdown_zero_orphans():
     assert not any(t.is_alive() for t in srv.executor._threads)
 
 
+def test_result_consumes_record_and_frees_rid():
+    """result() evicts the terminal record + event (no per-request leak
+    in a long-lived server) and the rid becomes reusable."""
+    rng = np.random.default_rng(14)
+    with SpectralServer([BucketConfig((64, 64))], threaded=False) as srv:
+        x = _c2c_payload(rng, (64, 64))
+        srv.submit("r", x)
+        assert srv.drain()
+        assert srv.result("r").status == "completed"
+        assert srv._records == {} and srv._done == {}
+        with pytest.raises(KeyError):
+            srv.result("r")                   # consumed
+        srv.submit("r", x)                    # reuse: no duplicate error
+        assert srv.drain()
+        assert srv.result("r").status == "completed"
+
+
+def test_prewarm_jnp_twin_failure_never_crashes(monkeypatch):
+    """Both the bucket's plan AND its jnp twin fail to compile at
+    pre-warm: startup still succeeds (degrade, never crash), the report
+    records the double failure, and the runtime degrade path serves the
+    first request anyway."""
+    from repro.serve.spectral import prewarm as prewarm_mod
+
+    def broken(state):
+        raise RuntimeError("no compile for you")
+
+    # only pre-warm sees the broken compiler; the executor's runtime
+    # make_fn is untouched, so first dispatch recovers
+    monkeypatch.setattr(prewarm_mod, "make_fn", broken)
+    rng = np.random.default_rng(15)
+    with SpectralServer([BucketConfig((64, 64))], threaded=False) as srv:
+        (entry,) = srv.prewarm_report.entries
+        assert entry.degraded
+        assert "jnp twin failed" in entry.reason
+        st = srv.states["c2c/f/64x64"]
+        assert st.fn is None and st.plan.backend == "jnp"
+        srv.submit("r", _c2c_payload(rng, (64, 64)))
+        assert srv.drain()
+        assert srv.result("r").status == "completed"
+
+
 def test_threaded_step_error_terminates_requests():
     """A dispatch error that survives the degrade path still terminates
     every request in the batch (status "error"), never orphans them."""
@@ -407,6 +513,56 @@ def test_threaded_step_error_terminates_requests():
             rec = srv.result("e", timeout=30)
         assert rec is not None and rec.status == "error"
         assert isinstance(rec.error, faults.FaultInjected)
+    finally:
+        srv.close()
+
+
+def test_threaded_staging_crash_still_releases_pipeline():
+    """A staging-side crash (next_batch itself raising) kills the staging
+    generator; the Prefetcher re-raises at the dispatch loop's next().
+    The drain sentinel must still flow — shutdown() joins promptly and no
+    pipeline thread is left alive."""
+    srv = SpectralServer([BucketConfig((64, 64))], threaded=True)
+    threads = list(srv.executor._threads)
+
+    def boom():
+        raise RuntimeError("staging boom")
+
+    srv.scheduler.next_batch = boom
+    srv.executor.poke()
+    time.sleep(0.2)                   # let staging hit the crash
+    t0 = time.monotonic()
+    srv.executor.shutdown()
+    assert time.monotonic() - t0 < 5.0
+    assert not any(t.is_alive() for t in threads)
+    snap = srv.metrics.snapshot()
+    assert "staging boom" in snap["buckets"]["_pipeline"]["staging_error"]
+
+
+def test_threaded_assembly_error_terminates_requests_not_pipeline():
+    """Batch assembly failing after the requests left the scheduler still
+    gives each an "error" terminal record, and staging survives to serve
+    later requests."""
+    rng = np.random.default_rng(16)
+    srv = SpectralServer([BucketConfig((64, 64))], threaded=True)
+    try:
+        orig = srv.executor._assemble
+        calls = {"n": 0}
+
+        def flaky(bucket, reqs):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("assembly boom")
+            return orig(bucket, reqs)
+
+        srv.executor._assemble = flaky
+        srv.submit("a", _c2c_payload(rng, (64, 64)))
+        rec = srv.result("a", timeout=30)
+        assert rec is not None and rec.status == "error"
+        assert "assembly boom" in str(rec.error)
+        srv.submit("b", _c2c_payload(rng, (64, 64)))
+        rec = srv.result("b", timeout=30)
+        assert rec is not None and rec.status == "completed"
     finally:
         srv.close()
 
