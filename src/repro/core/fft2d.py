@@ -5,16 +5,21 @@ Two execution paths behind the plan registry's ``backend`` switch:
 - ``backend="jnp"`` — row-column decomposition: FFT the last axis, global
   transpose, FFT again.  The explicit transpose mirrors the paper's global
   transpose between the two 1-D passes; XLA lowers it to an in-HBM relayout.
-- ``backend="pallas"`` — the fused transpose-free kernel
-  (:mod:`repro.kernels.fft2d_fused`): row FFT, in-VMEM tile transpose and
-  column FFT all happen inside one kernel, so the global transpose never
-  round-trips through HBM (``algo="fused"``).  ``algo="row_col"`` keeps the
-  transpose-based two-kernel pipeline as the measured baseline.
+- ``backend="pallas"`` — the GEMM-formulated fused kernel
+  (:mod:`repro.kernels.fft2d_gemm`, ``algo="fused"``): both 1-D passes run
+  as four-step DFT matmuls inside one kernel, the column pass as left-side
+  contractions, so the global transpose never materialises anywhere — not
+  in HBM, not even in VMEM.  ``algo="fused_stockham"`` keeps the previous
+  Stockham-stage fused kernel (:mod:`repro.kernels.fft2d_fused`) as the
+  explicit-algo oracle, and ``algo="row_col"`` the transpose-based
+  two-kernel pipeline as the measured baseline.
 
-``fft2`` with ``algo="auto"`` routes through :func:`repro.core.plan.get_plan`
-so the (shape, dtype, direction, backend) decision — and any autotune result
-— is resolved once and reused.  The distributed version (all_to_all pencil
-transpose) lives in :mod:`repro.dist.pencil`.
+``fft2`` and ``fft3`` with ``algo="auto"`` route through
+:func:`repro.core.plan.get_plan` so the (shape, dtype, direction, backend)
+decision — and any autotune result — is resolved once and reused; 3-D
+pallas keys resolve to the fused pencil-in-VMEM kernel
+(:mod:`repro.kernels.fft3d_fused`).  The distributed version (all_to_all
+pencil transpose) lives in :mod:`repro.dist.pencil`.
 """
 from __future__ import annotations
 
@@ -31,18 +36,27 @@ def _swap(x: SplitComplex, a: int, b: int) -> SplitComplex:
 
 def _fft2_direct(x: SplitComplex, *, inverse: bool = False,
                  algo: str = "auto", backend: str = "jnp",
-                 block_batch: int = None) -> SplitComplex:
+                 block_batch: int = None,
+                 variant: str = "plain") -> SplitComplex:
     """Execute a resolved 2-D plan config (no registry lookup).
 
-    ``block_batch`` means images-per-tile for the fused kernel and the 1-D
-    kernel's row tile for the row_col baseline (defaults 1 and 8).
+    ``block_batch`` means images-per-tile for the fused kernels and the 1-D
+    kernel's row tile for the row_col baseline (defaults 1 and 8);
+    ``variant`` selects the GEMM kernel's precision path ("plain" or the
+    bf16 "compensated" one).
     """
     if backend == "pallas":
         from repro.kernels import ops as kops
-        if algo not in ("auto", "fused", "row_col"):
+        if algo not in ("auto", "fused", "fused_stockham", "row_col"):
             raise ValueError(f'algo={algo!r} has no pallas 2-D path; use '
-                             '"fused" or "row_col" (or backend="jnp")')
+                             '"fused", "fused_stockham" or "row_col" '
+                             '(or backend="jnp")')
         if algo in ("auto", "fused"):
+            return kops.fft2d_gemm(x, inverse=inverse,
+                                   block_batch=block_batch or 1,
+                                   variant=variant)
+        if algo == "fused_stockham":
+            # the explicit-algo oracle: the pre-GEMM Stockham fused kernel
             return kops.fft2d_fused(x, inverse=inverse,
                                     block_batch=block_batch or 1)
         # transpose-based baseline on the same backend: two 1-D kernel
@@ -52,9 +66,9 @@ def _fft2_direct(x: SplitComplex, *, inverse: bool = False,
         y = _swap(y, -1, -2)
         y = kops.fft_stockham(y, inverse=inverse, block_batch=bb)
         return _swap(y, -1, -2)
-    if algo == "fused":
-        raise ValueError('algo="fused" requires backend="pallas" '
-                         '(the fused kernel has no jnp equivalent)')
+    if algo in ("fused", "fused_stockham"):
+        raise ValueError(f'algo={algo!r} requires backend="pallas" '
+                         '(the fused kernels have no jnp equivalent)')
     row_algo = "auto" if algo in ("auto", "row_col") else algo
     y = fft1d.fft(x, inverse=inverse, algo=row_algo)   # FFT each row
     y = _swap(y, -1, -2)                               # global transpose
@@ -74,16 +88,62 @@ def fft2(x: SplitComplex, *, inverse: bool = False, algo: str = "auto",
     return _fft2_direct(x, inverse=inverse, algo=algo, backend=backend)
 
 
-def fft3(x: SplitComplex, *, inverse: bool = False,
-         algo: str = "auto") -> SplitComplex:
-    """3-D FFT over the last three axes."""
-    y = fft1d.fft(x, inverse=inverse, algo=algo)
+def _fft3_direct(x: SplitComplex, *, inverse: bool = False,
+                 algo: str = "auto", backend: str = "jnp",
+                 block_batch: int = None,
+                 variant: str = "plain") -> SplitComplex:
+    """Execute a resolved 3-D plan config (no registry lookup)."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        if algo not in ("auto", "fused", "row_col"):
+            raise ValueError(f'algo={algo!r} has no pallas 3-D path; use '
+                             '"fused" or "row_col" (or backend="jnp")')
+        if algo in ("auto", "fused"):
+            return kops.fft3d_fused(x, inverse=inverse,
+                                    block_batch=block_batch or 1,
+                                    variant=variant)
+        # transpose-based baseline: three 1-D kernel passes with explicit
+        # global (HBM) relayouts between them
+        bb = block_batch or 8
+        y = kops.fft_stockham(x, inverse=inverse, block_batch=bb)
+        y = _swap(y, -1, -2)
+        y = kops.fft_stockham(y, inverse=inverse, block_batch=bb)
+        y = _swap(y, -1, -2)
+        y = _swap(y, -1, -3)
+        y = kops.fft_stockham(y, inverse=inverse, block_batch=bb)
+        return _swap(y, -1, -3)
+    if algo == "fused":
+        raise ValueError('algo="fused" requires backend="pallas" '
+                         '(the fused 3-D kernel has no jnp equivalent)')
+    pass_algo = "auto" if algo in ("auto", "row_col") else algo
+    y = fft1d.fft(x, inverse=inverse, algo=pass_algo)
     y = _swap(y, -1, -2)
-    y = fft1d.fft(y, inverse=inverse, algo=algo)
+    y = fft1d.fft(y, inverse=inverse, algo=pass_algo)
     y = _swap(y, -1, -2)
     y = _swap(y, -1, -3)
-    y = fft1d.fft(y, inverse=inverse, algo=algo)
+    y = fft1d.fft(y, inverse=inverse, algo=pass_algo)
     return _swap(y, -1, -3)
+
+
+def fft3(x: SplitComplex, *, inverse: bool = False, algo: str = "auto",
+         backend: str = "jnp") -> SplitComplex:
+    """3-D FFT over the last three axes, routed through the plan registry.
+
+    ``algo="auto"`` resolves the (d, h, w) key once per shape — pallas
+    keys select the fused pencil-in-VMEM kernel
+    (:mod:`repro.kernels.fft3d_fused`) and demote to jnp with a
+    registry-visible reason when the shape has no kernel path — exactly
+    the plumbing :func:`fft2` has always had (previously ``fft3`` took no
+    ``backend`` and bypassed the registry entirely, so no 3-D caller
+    could reach a kernel or see a demote reason).
+    """
+    if len(x.shape) < 3:
+        raise ValueError(f"fft3 needs at least 3 axes, got shape {x.shape}")
+    if algo == "auto":
+        from . import plan as _plan
+        return _plan.get_plan(x.shape[-3:], dtype=x.dtype, inverse=inverse,
+                              backend=backend)(x)
+    return _fft3_direct(x, inverse=inverse, algo=algo, backend=backend)
 
 
 def rfft2(x: jnp.ndarray, *, algo: str = "auto",

@@ -13,8 +13,19 @@ paid once per key, mirroring how the paper bakes per-size decisions
 ``backend="pallas"`` dispatches to the TPU kernels in
 :mod:`repro.kernels.ops` (interpret-mode on CPU).  1-D shapes are ``(n,)``;
 2-D shapes ``(h, w)`` cover :func:`repro.core.fft2d.fft2`, where the pallas
-backend runs the fused transpose-free kernel
-(:mod:`repro.kernels.fft2d_fused`).
+backend runs the GEMM-formulated fused kernel
+(:mod:`repro.kernels.fft2d_gemm`, ``algo="fused"``; the previous
+Stockham-stage kernel stays reachable as the explicit-algo oracle
+``algo="fused_stockham"``); 3-D shapes ``(d, h, w)`` cover
+:func:`repro.core.fft2d.fft3`, where the pallas backend runs the fused
+pencil-in-VMEM kernel (:mod:`repro.kernels.fft3d_fused`).
+
+GEMM-fused plans additionally carry a ``variant``: ``"plain"`` casts the
+four-step operand tables straight to the working dtype, while
+``"compensated"`` (the auto default for sub-fp32 dtypes) stores them as
+split hi/lo pairs and accumulates in fp32 — the precision-compensated
+bf16 path that halves the VMEM working set (the 1024x1024 capacity
+question) without paying the full bf16 arithmetic error.
 
 ``tune=True`` runs an opt-in FFTW-style measuring autotuner: every candidate
 (algo, radix, block_batch) config is timed on synthetic data and the winner
@@ -38,7 +49,8 @@ candidate, so tuning can cross backends.
 
 Tuned winners persist across processes FFTW-"wisdom" style:
 :func:`save_wisdom` / :func:`load_wisdom` round-trip the registry's tuned
-(algo, radix, block_batch, backend) entries as versioned, key-hashed JSON.
+(algo, radix, block_batch, backend, variant) entries as versioned,
+key-hashed JSON.
 """
 from __future__ import annotations
 
@@ -86,6 +98,7 @@ class FFTPlan:
     radix: int = 4                    # Stockham radix (4 = mixed 4/2, 2 = oracle)
     block_batch: int = 8              # pallas batch tile
     kind: str = "c2c"                 # "c2c" | "rfft" (real input/output)
+    variant: str = "plain"            # GEMM kernels: "plain" | "compensated"
     tuned: bool = False
     tune_report: Optional[dict] = None   # {candidate label: us} when tuned
     demote_reason: Optional[str] = None  # why a pallas request fell to jnp
@@ -132,7 +145,14 @@ class FFTPlan:
             from . import fft2d
             return fft2d._fft2_direct(x, inverse=self.inverse, algo=self.algo,
                                       backend=self.backend,
-                                      block_batch=self.block_batch)
+                                      block_batch=self.block_batch,
+                                      variant=self.variant)
+        if self.ndim == 3:
+            from . import fft2d
+            return fft2d._fft3_direct(x, inverse=self.inverse, algo=self.algo,
+                                      backend=self.backend,
+                                      block_batch=self.block_batch,
+                                      variant=self.variant)
         if self.backend == "pallas":
             from repro.kernels import ops as kops
             if self.algo == "four_step":
@@ -192,6 +212,7 @@ class FFTPlan:
 
 def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
              algo: str = "auto", backend: str = "jnp", kind: str = "c2c",
+             variant: str = "auto",
              tune: bool = False, tune_batch: int = 8,
              prune: str = "none", prune_k: Optional[int] = None,
              model_arch: str = "tpu_v5e",
@@ -225,11 +246,20 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     retry, then the candidate is excluded — a hung config cannot hang
     tuning); the default defers to the resilience config
     (``resilience.config.get("measure_timeout_s")``), ``None`` disables it.
+
+    ``variant`` selects the GEMM kernels' precision path: ``"auto"``
+    resolves to ``"compensated"`` for sub-fp32 GEMM-fused plans (split
+    hi/lo operand tables + fp32 accumulation) and ``"plain"`` otherwise;
+    an explicit variant is interned separately like an explicit algo.
     """
     shape = tuple(int(d) for d in shape)
-    assert len(shape) in (1, 2), f"1-D or 2-D plans only, got {shape}"
+    assert len(shape) in (1, 2, 3), f"1-D/2-D/3-D plans only, got {shape}"
     assert kind in PLAN_KINDS, f"kind must be one of {PLAN_KINDS}, got {kind}"
     assert prune in ("none", "model"), prune
+    assert variant in ("auto", "plain", "compensated"), variant
+    if kind == "rfft" and len(shape) == 3:
+        raise ValueError("rfft plans are 1-D or 2-D; 3-D real transforms "
+                         "compose rfft2 with a c2c depth pass")
     # the kernels need power-of-two tile dims of at least 2 (a unit dim
     # would underflow the tile asserts) — anything else demotes to jnp
     kernel_ok = all(_is_pow2(d) and d >= 2 for d in shape)
@@ -291,39 +321,61 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
             backend = "jnp"
         block_batch = 8
     else:
+        fused_algos = ("fused", "fused_stockham") if len(shape) == 2 \
+            else ("fused",)           # no 3-D Stockham oracle
         if backend == "pallas" and not kernel_ok:
             demote = ("kernels need power-of-two tile dims >= 2, "
                       f"got {shape}")
-            if algo == "fused":
+            if algo in fused_algos:
                 algo = "auto"         # fused demotes with its backend
             backend = "jnp"
         if algo == "auto":
             resolved = "fused" if backend == "pallas" else "row_col"
         else:
             resolved = algo
-        if backend == "jnp" and resolved == "fused":
-            raise ValueError('algo="fused" requires backend="pallas" '
-                             '(the fused kernel has no jnp equivalent)')
-        if resolved not in ("fused", "row_col"):
-            raise ValueError(f'algo={resolved!r} is not a 2-D plan algo; '
-                             'use "fused", "row_col", or "auto"')
-        # fused: one (h, w) image per VMEM tile; row_col: the 1-D kernel's
-        # row-tile default (what _fft2_direct actually executes)
-        block_batch = 1 if resolved == "fused" else 8
+        if backend == "jnp" and resolved in fused_algos:
+            raise ValueError(f'algo={resolved!r} requires backend="pallas" '
+                             '(the fused kernels have no jnp equivalent)')
+        if resolved not in fused_algos + ("row_col",):
+            raise ValueError(
+                f'algo={resolved!r} is not a {len(shape)}-D plan algo; '
+                f'use one of {fused_algos + ("row_col",)} or "auto"')
+        # fused: one (h, w) image / (d, h, w) brick per VMEM tile; row_col:
+        # the 1-D kernel's row-tile default (what the direct path executes)
+        block_batch = 1 if resolved in fused_algos else 8
+
+    # the GEMM kernels (complex fused 2-D/3-D) are the only variant-aware
+    # paths; "auto" picks the compensated tables for sub-fp32 dtypes so a
+    # bf16 plan gets the split-twiddle precision fix by default
+    gemm_path = (kind == "c2c" and len(shape) >= 2 and backend == "pallas"
+                 and resolved == "fused")
+    if variant == "auto":
+        res_variant = "compensated" if gemm_path and \
+            jnp.dtype(dtype).itemsize < 4 else "plain"
+    elif variant == "compensated" and not gemm_path:
+        if demote is None:
+            raise ValueError('variant="compensated" requires a GEMM fused '
+                             'plan (2-D/3-D c2c, backend="pallas", '
+                             'algo="fused")')
+        res_variant = "plain"         # the kernel path demoted away
+    else:
+        res_variant = variant
 
     key = _plan_key(shape, dtype, inverse, backend, kind)
-    cache_key = key if algo == "auto" else key + (resolved, radix)
-    cache = _PLAN_CACHE if algo == "auto" else _OVERRIDE_CACHE
+    explicit = algo != "auto" or variant != "auto"
+    cache_key = key if not explicit else key + (resolved, radix, res_variant)
+    cache = _PLAN_CACHE if not explicit else _OVERRIDE_CACHE
     plan = cache.get(cache_key)
     if plan is None:
         plan = FFTPlan(shape=shape, dtype=key[1], inverse=inverse,
                        algo=resolved, radix=radix, backend=backend,
                        block_batch=block_batch, kind=kind,
-                       demote_reason=demote)
+                       variant=res_variant, demote_reason=demote)
         cache[cache_key] = plan
     if tune and not plan.tuned:
         plan = _autotune(cache_key, plan, batch=tune_batch,
                          fixed_algo=algo != "auto", fixed_radix=fixed_radix,
+                         fixed_variant=variant != "auto",
                          prune=prune, prune_k=prune_k, model_arch=model_arch,
                          measure_timeout_s=measure_timeout_s)
         cache[cache_key] = plan
@@ -442,12 +494,13 @@ def autotune_count(shape, *, dtype=jnp.float32, inverse: bool = False,
 # Wisdom (FFTW-style persisted plans)
 # ---------------------------------------------------------------------------
 
-# v2: entries carry the tuned *backend* (rfft-kind keys autotune across
-# backends since the fused rfft kernel landed).  v1 files were written
-# when rfft keys were hard-pinned to backend="jnp"; loading one would
-# silently resurrect "jnp" as the tuned winner for keys that now have a
-# kernel path, so the version guard rejects them outright.
-WISDOM_VERSION = 2
+# v3: entries carry the tuned *variant* (GEMM-fused keys autotune over
+# the plain/compensated precision variants since the GEMM core landed);
+# a v2 file has no variant field, so loading one would silently install
+# bf16 GEMM winners with the wrong (plain) tables — the version guard
+# rejects v2 outright, like v2 rejected the backend-less v1 files (which
+# were written when rfft keys were hard-pinned to backend="jnp").
+WISDOM_VERSION = 3
 
 
 def _wisdom_key_str(key: PlanKey) -> str:
@@ -462,12 +515,14 @@ def _wisdom_key_parse(s: str) -> PlanKey:
             bool(int(parts["inverse"])), parts["backend"], parts["kind"])
 
 
-def _wisdom_hash(key_str: str, algo, radix, block_batch, backend) -> str:
+def _wisdom_hash(key_str: str, algo, radix, block_batch, backend,
+                 variant) -> str:
     """Guard hash over the version, the key AND the tuned values, so a
     stale or hand-edited entry (wrong algo for the shape, typo'd radix,
-    swapped backend) cannot install a bogus tuned plan."""
+    swapped backend or precision variant) cannot install a bogus tuned
+    plan."""
     payload = (f"v{WISDOM_VERSION}:{key_str}:{algo}:{radix}:{block_batch}"
-               f":{backend}")
+               f":{backend}:{variant}")
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
@@ -491,12 +546,16 @@ def save_wisdom(path: str) -> int:
         entries.append({
             "key": ks,
             "key_hash": _wisdom_hash(ks, plan.algo, plan.radix,
-                                     plan.block_batch, plan.backend),
+                                     plan.block_batch, plan.backend,
+                                     plan.variant),
             "algo": plan.algo, "radix": plan.radix,
             "block_batch": plan.block_batch,
             # the *tuned* backend: a pallas key's winner may be the jnp
             # schedule (and the key records the requested backend)
             "backend": plan.backend,
+            # the tuned precision variant (GEMM-fused keys; "plain"
+            # everywhere else)
+            "variant": plan.variant,
             "tune_report": plan.tune_report,
         })
     payload = json.dumps({"version": WISDOM_VERSION, "entries": entries},
@@ -541,8 +600,9 @@ def load_wisdom(path: str, *, strict: bool = False) -> int:
             radix = int(e["radix"])
             block_batch = int(e["block_batch"])
             backend = e["backend"]
-            if _wisdom_hash(ks, algo, radix, block_batch,
-                            backend) != e["key_hash"]:
+            variant = e["variant"]
+            if _wisdom_hash(ks, algo, radix, block_batch, backend,
+                            variant) != e["key_hash"]:
                 raise ValueError(f"wisdom key-hash mismatch for {ks!r}")
             key = _wisdom_key_parse(ks)
         except (KeyError, ValueError, TypeError) as ex:
@@ -559,7 +619,8 @@ def load_wisdom(path: str, *, strict: bool = False) -> int:
         _PLAN_CACHE[key] = FFTPlan(
             shape=key[0], dtype=key[1], inverse=key[2], backend=backend,
             kind=key[4], algo=algo, radix=radix,
-            block_batch=block_batch, tuned=True, tune_report=report)
+            block_batch=block_batch, variant=variant,
+            tuned=True, tune_report=report)
         loaded += 1
     return loaded
 
@@ -711,7 +772,8 @@ def _time_candidates(plans, x: SplitComplex, *, warmup: int = 1,
 
 
 def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
-                fixed_radix: bool = False, batch: int = 8):
+                fixed_radix: bool = False, fixed_variant: bool = False,
+                batch: int = 8):
     """(label, plan) candidate configs for this key — the (algo, radix,
     block_batch) grid, kept small so measuring stays cheap.  The heuristic
     default is always candidate 0, so tuning can never pick a config that
@@ -781,7 +843,21 @@ def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
             for bb in sorted({min(b, batch) for b in (1, 2)}):
                 out.append((f"fused/bb{bb}",
                             base(plan, algo="fused", block_batch=bb)))
-            out.append(("row_col", base(plan, algo="row_col")))
+            if jnp.dtype(plan.dtype).itemsize < 4 and not fixed_variant:
+                # sub-fp32 GEMM keys also measure the *other* precision
+                # variant: compensated pays 2x table flops for ~2x less
+                # error, and which side wins is a measurement question
+                other = "plain" if plan.variant == "compensated" \
+                    else "compensated"
+                out.append((f"fused/{other}/bb1",
+                            base(plan, algo="fused", block_batch=1,
+                                 variant=other)))
+            if plan.ndim == 2:
+                out.append(("fused_stockham/bb1",
+                            base(plan, algo="fused_stockham", block_batch=1,
+                                 variant="plain")))
+            out.append(("row_col", base(plan, algo="row_col",
+                                        variant="plain")))
         else:
             out.append(("row_col", base(plan, algo="row_col")))
     if fixed_algo:
@@ -790,7 +866,7 @@ def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
         out = [(lbl, c) for lbl, c in out if c.radix == plan.radix]
     seen, uniq = set(), []
     for lbl, c in out:                # drop configs identical to the default
-        cfg = (c.algo, c.radix, c.block_batch)
+        cfg = (c.algo, c.radix, c.block_batch, c.variant)
         if cfg not in seen:
             seen.add(cfg)
             uniq.append((lbl, c))
@@ -834,6 +910,7 @@ def _model_prune(cands, *, batch: int, prune_k: Optional[int],
 
 def _autotune(key, plan: FFTPlan, *, batch: int = 8,
               fixed_algo: bool = False, fixed_radix: bool = False,
+              fixed_variant: bool = False,
               prune: str = "none", prune_k: Optional[int] = None,
               model_arch: str = "tpu_v5e",
               measure_timeout_s: Optional[float] = "config") -> FFTPlan:
@@ -860,7 +937,7 @@ def _autotune(key, plan: FFTPlan, *, batch: int = 8,
         x = SplitComplex(jnp.asarray(rng.standard_normal(shp), dt),
                          jnp.asarray(rng.standard_normal(shp), dt))
     cands = _candidates(plan, fixed_algo=fixed_algo, fixed_radix=fixed_radix,
-                        batch=batch)
+                        fixed_variant=fixed_variant, batch=batch)
     n_all = len(cands)
     pruned_labels = []
     if prune == "model":

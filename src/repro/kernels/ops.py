@@ -17,6 +17,8 @@ from . import fft_stockham as _stockham
 from . import fft_fourstep as _fourstep
 from . import fft_stage as _stage
 from . import fft2d_fused as _fused2d
+from . import fft2d_gemm as _gemm2d
+from . import fft3d_fused as _fused3d
 from . import rfft2d_fused as _rfused2d
 
 
@@ -101,6 +103,73 @@ def fft2d_fused(x: SplitComplex, *, inverse: bool = False,
     out = SplitComplex(out.re[:batch], out.im[:batch])
     return SplitComplex(out.re.reshape(*lead, h, w),
                         out.im.reshape(*lead, h, w))
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_batch",
+                                             "variant", "interpret"))
+def fft2d_gemm(x: SplitComplex, *, inverse: bool = False,
+               block_batch: int = 1, variant: str = "plain",
+               interpret: bool = None) -> SplitComplex:
+    """GEMM-formulated fused 2-D FFT over the last two axes (any leading
+    batch dims): four-step DFT matmul passes, transpose absorbed; see
+    :mod:`repro.kernels.fft2d_gemm`.  ``variant="compensated"`` runs the
+    precision-compensated bf16 path (split tables + fp32 accumulation)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat, lead = _flatten2d(x)
+    h, w = flat.shape[-2:]
+    batch = flat.shape[0]
+    if batch == 0:
+        return x                       # empty batch: nothing to transform
+    (re, im), bb = _pad_batch2d([flat.re, flat.im], batch, block_batch)
+    out = _gemm2d.fft2d_gemm_pallas(SplitComplex(re, im), inverse=inverse,
+                                    block_batch=bb, variant=variant,
+                                    interpret=interpret)
+    return SplitComplex(out.re[:batch].reshape(*lead, h, w),
+                        out.im[:batch].reshape(*lead, h, w))
+
+
+def _flatten3d(x: SplitComplex):
+    d, h, w = x.shape[-3:]
+    lead = x.shape[:-3]
+    batch = 1
+    for n in lead:
+        batch *= n
+    return SplitComplex(x.re.reshape(batch, d, h, w),
+                        x.im.reshape(batch, d, h, w)), lead
+
+
+def _pad_batch3d(arrs, batch: int, block_batch: int):
+    """Pad flattened (batch, d, h, w) component planes up to the block
+    size.  Callers guard ``batch > 0``."""
+    bb = min(block_batch, batch)
+    pad = (-batch) % bb
+    if pad:
+        arrs = [jnp.pad(a, ((0, pad),) + ((0, 0),) * 3) for a in arrs]
+    return arrs, bb
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_batch",
+                                             "variant", "interpret"))
+def fft3d_fused(x: SplitComplex, *, inverse: bool = False,
+                block_batch: int = 1, variant: str = "plain",
+                interpret: bool = None) -> SplitComplex:
+    """Fused 3-D FFT over the last three axes (any leading batch dims):
+    pencil-in-VMEM four-step GEMM passes, both relayouts absorbed; see
+    :mod:`repro.kernels.fft3d_fused`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat, lead = _flatten3d(x)
+    d, h, w = flat.shape[-3:]
+    batch = flat.shape[0]
+    if batch == 0:
+        return x                       # empty batch: nothing to transform
+    (re, im), bb = _pad_batch3d([flat.re, flat.im], batch, block_batch)
+    out = _fused3d.fft3d_fused_pallas(SplitComplex(re, im), inverse=inverse,
+                                      block_batch=bb, variant=variant,
+                                      interpret=interpret)
+    return SplitComplex(out.re[:batch].reshape(*lead, d, h, w),
+                        out.im[:batch].reshape(*lead, d, h, w))
 
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))

@@ -57,14 +57,17 @@ def fourstep_factors(n: int):
     return n1, n // n1
 
 
-def fourstep_tables_np(n: int, inverse: bool):
+def fourstep_tables_np(n: int, inverse: bool, factors=None):
     """Host-built float64 tables for one four-step pass of length n, cast
     by the caller: DFT matrices for both factors plus the inter-factor
     twiddle ``T[k1, j2] = exp(sign * 2*pi*i * k1*j2 / n)`` — composed from
     the (lru-cached) builders in :mod:`repro.core.twiddle`.  No 1/n
-    scaling — the inverse kernels fold one 1/(H*W) at the end."""
+    scaling — the inverse kernels fold one 1/(H*W) at the end.  An
+    explicit ``factors`` pair overrides :func:`fourstep_factors` (the 3-D
+    kernel's leaf crossover sits one octave lower)."""
     from repro.core.twiddle import _dft_matrix_np, _fourstep_twiddle_np
-    n1, n2 = fourstep_factors(n)
+    n1, n2 = fourstep_factors(n) if factors is None else factors
+    assert n1 * n2 == n, (n, n1, n2)
     sign = 1.0 if inverse else -1.0
     w1r, w1i = _dft_matrix_np(n1, sign)
     w2r, w2i = _dft_matrix_np(n2, sign)

@@ -28,7 +28,14 @@ cooldown_calls       calls served by the jnp schedule while a circuit is
 parseval_tol         relative energy-ratio tolerance for fp32 plans.
 parseval_tol_lowp    the same for sub-fp32 dtypes (bf16/f16 plans).
 hermitian_tol        relative residual tolerance of the rfft symmetry
-                     checks.
+                     checks (fp32 plans).
+hermitian_tol_lowp   the same for sub-fp32 dtypes: a *healthy* bf16
+                     kernel's symmetry residual sits at the bf16
+                     quantisation floor (~1e-2 relative), far above the
+                     fp32 tolerance — without the dtype-aware knob every
+                     healthy bf16 execution would count as a guard
+                     failure and walk the circuit breaker into
+                     ``runtime_circuit_open``.
 measure_timeout_s    per-candidate autotune measurement watchdog (seconds);
                      ``None`` disables the watchdog thread entirely.
 """
@@ -47,6 +54,7 @@ DEFAULTS = dict(
     parseval_tol=1e-3,
     parseval_tol_lowp=5e-2,
     hermitian_tol=1e-3,
+    hermitian_tol_lowp=5e-2,
     measure_timeout_s=120.0,
 )
 

@@ -163,7 +163,8 @@ def check_output(plan, x, y, level: Optional[str] = None) -> GuardReport:
                                   f"outside 1±{tol:g}")
     herm = hermitian_residual(plan, y)
     checks["hermitian_residual"] = herm
-    htol = config.get("hermitian_tol")
+    htol = config.get("hermitian_tol_lowp") if _is_lowp(plan.dtype) \
+        else config.get("hermitian_tol")
     if herm > htol:
         return GuardReport(ok=False, checks=checks,
                            reason=f"Hermitian residual {herm:.6g} > {htol:g}")

@@ -96,6 +96,7 @@ class PlanTrace:
     backend: str
     stages: Tuple[TraceStage, ...]
     sram_budget: int
+    variant: str = "plain"           # GEMM kernels: "plain" | "compensated"
 
     @property
     def seconds(self) -> float:
@@ -134,6 +135,7 @@ class PlanTrace:
             "arch": self.arch, "shape": list(self.shape), "batch": self.batch,
             "algo": self.algo, "radix": self.radix,
             "block_batch": self.block_batch, "backend": self.backend,
+            "variant": self.variant,
             "seconds": self.seconds, "flops": self.flops,
             "dram_bytes": self.dram_bytes, "noc_bytes": self.noc_bytes,
             "energy_j": self.energy_j, "power_w": self.power_w,
@@ -291,6 +293,7 @@ def trace_plan(plan, *, arch="wormhole_n300", batch: int = 1) -> PlanTrace:
     """
     a = get_arch(arch)
     elem = plan_elem_bytes(plan)
+    variant = getattr(plan, "variant", "plain")
     stages: List[TraceStage] = []
 
     if getattr(plan, "kind", "c2c") == "rfft":
@@ -301,9 +304,13 @@ def trace_plan(plan, *, arch="wormhole_n300", batch: int = 1) -> PlanTrace:
             f"fft1d_{plan.algo}", a, n=n, rows=batch, algo=plan.algo,
             radix=plan.radix, block_batch=plan.block_batch,
             elem_bytes=elem))
-    else:
+    elif len(plan.shape) == 2:
         h, w = plan.shape
         if plan.algo == "fused":
+            stages.append(_gemm2d_stage(a, h=h, w=w, batch=batch,
+                                        block_batch=plan.block_batch,
+                                        variant=variant, elem_bytes=elem))
+        elif plan.algo == "fused_stockham":
             stages.append(_fused2d_stage(a, h=h, w=w, batch=batch,
                                          radix=plan.radix,
                                          block_batch=plan.block_batch,
@@ -324,11 +331,48 @@ def trace_plan(plan, *, arch="wormhole_n300", batch: int = 1) -> PlanTrace:
                                            batch=batch, elem_bytes=elem))
         else:
             raise ValueError(f"no trace model for 2-D algo {plan.algo!r}")
+    else:
+        d, h, w = plan.shape
+        if plan.algo == "fused":
+            stages.append(_gemm3d_stage(a, d=d, h=h, w=w, batch=batch,
+                                        block_batch=plan.block_batch,
+                                        variant=variant, elem_bytes=elem))
+        elif plan.algo in ("row_col", "auto"):
+            bb = plan.block_batch
+            p_algo = "stockham" if plan.backend == "pallas" else "auto"
+            # the direct path's per-axis schedule: W pass in place, then
+            # each of the H and D passes brackets its 1-D pass with a
+            # swap-in/swap-out relayout pair — four full-volume
+            # round-trips the fused kernel's absorbed contractions skip
+            stages.append(_fft_pass_stage(
+                "w_fft", a, n=w, rows=batch * d * h, algo=p_algo,
+                radix=plan.radix, block_batch=bb, elem_bytes=elem))
+            stages.append(_transpose_stage("transpose_wh_in", a, h=h, w=w,
+                                           batch=batch * d,
+                                           elem_bytes=elem))
+            stages.append(_fft_pass_stage(
+                "h_fft", a, n=h, rows=batch * d * w, algo=p_algo,
+                radix=plan.radix, block_batch=bb, elem_bytes=elem))
+            stages.append(_transpose_stage("transpose_wh_out", a, h=w, w=h,
+                                           batch=batch * d,
+                                           elem_bytes=elem))
+            stages.append(_transpose_stage("transpose_wd_in", a, h=d,
+                                           w=h * w, batch=batch,
+                                           elem_bytes=elem))
+            stages.append(_fft_pass_stage(
+                "d_fft", a, n=d, rows=batch * h * w, algo=p_algo,
+                radix=plan.radix, block_batch=bb, elem_bytes=elem))
+            stages.append(_transpose_stage("transpose_wd_out", a, h=h * w,
+                                           w=d, batch=batch,
+                                           elem_bytes=elem))
+        else:
+            raise ValueError(f"no trace model for 3-D algo {plan.algo!r}")
 
     return PlanTrace(arch=a.name, shape=tuple(plan.shape), batch=batch,
                      algo=plan.algo, radix=plan.radix,
                      block_batch=plan.block_batch, backend=plan.backend,
-                     stages=tuple(stages), sram_budget=a.sram_budget)
+                     stages=tuple(stages), sram_budget=a.sram_budget,
+                     variant=variant)
 
 
 def _untangle_stage(name: str, a: Arch, *, n: int, rows: int,
@@ -398,10 +442,10 @@ def _rfft_stages(plan, a: Arch, *, batch: int,
 
 def _fused2d_stage(a: Arch, *, h: int, w: int, batch: int, radix: int,
                    block_batch: int, elem_bytes: int) -> TraceStage:
-    """The fused transpose-free 2-D kernel: one stage, 2 DRAM plane
-    traversals (read + write), everything else VMEM/L1-resident — row
-    pass, in-SRAM tile transpose, column pass
-    (:mod:`repro.kernels.fft2d_fused`)."""
+    """The Stockham-stage fused 2-D kernel (the explicit-algo oracle,
+    ``algo="fused_stockham"``): one stage, 2 DRAM plane traversals
+    (read + write), everything else VMEM/L1-resident — row pass, in-SRAM
+    tile transpose, column pass (:mod:`repro.kernels.fft2d_fused`)."""
     plane = float(h) * w * elem_bytes              # one split-complex image
     total = batch * plane
     bb = max(1, min(block_batch, batch))
@@ -417,22 +461,105 @@ def _fused2d_stage(a: Arch, *, h: int, w: int, batch: int, radix: int,
     # i.e. 2 planes per image in the block, plus both twiddle tables —
     # 2 x 8 MiB at 1024x1024/bb=1, the ROADMAP's 16 MiB VMEM question
     high_water = 2 * bb * int(h * w * elem_bytes) + tw
-    return _mk_stage("fused_fft2d", a,
+    return _mk_stage("fused_fft2d_stockham", a,
                      flops=batch * fft_flops(h * w),
                      dram_in=total + tw, dram_out=total,
                      sram_read=sram_rw, sram_write=sram_rw,
                      sram_high_water=high_water, grid_steps=grid_steps)
 
 
-def fourstep_table_bytes(n: int, *, elem_bytes: int = 8) -> int:
+def fourstep_table_bytes(n: int, *, elem_bytes: int = 8,
+                         factors=None) -> int:
     """Bytes of the one-level four-step operand tables the fused rfft
     kernel stages per axis: both factor DFT matrices plus the (n1, n2)
     inter-factor twiddle, re+im planes (``elem_bytes`` per split-complex
     element, matching :func:`repro.kernels.rfft2d_fused.fourstep_tables_np`).
-    """
-    from repro.kernels.rfft2d_fused import fourstep_factors
-    n1, n2 = fourstep_factors(n)
+    ``factors`` overrides the 2-D kernel's split rule (the 3-D kernel's
+    leaf crossover sits one octave lower)."""
+    if factors is None:
+        from repro.kernels.rfft2d_fused import fourstep_factors
+        factors = fourstep_factors(n)
+    n1, n2 = factors
     return (n1 * n1 + n2 * n2 + n1 * n2) * elem_bytes
+
+
+def _fourstep_pass_flops(n: int, rows: float, factors=None) -> float:
+    """Real-op count of ``rows`` one-level four-step passes of length
+    ``n``: both factor DFT matmuls (8 real ops per complex MAC) plus the
+    pointwise inter-factor twiddle — the 8*n*(n1+n2) + 6*n accounting of
+    :func:`_fft_pass_stage`'s four_step arm."""
+    if factors is None:
+        from repro.kernels.rfft2d_fused import fourstep_factors
+        factors = fourstep_factors(n)
+    n1, n2 = factors
+    return rows * (8.0 * n * (n1 + n2) + 6.0 * n)
+
+
+def _gemm2d_stage(a: Arch, *, h: int, w: int, batch: int, block_batch: int,
+                  variant: str, elem_bytes: int) -> TraceStage:
+    """The GEMM-formulated fused 2-D kernel
+    (:mod:`repro.kernels.fft2d_gemm`, ``algo="fused"``): ONE stage, 2 DRAM
+    plane traversals plus the four-step operand tables, both passes dense
+    DFT matmuls with the column transpose absorbed into the contraction.
+    The ``compensated`` variant doubles the table bytes (split hi/lo
+    pairs) and the table-side flops (two-operand reconstruction + fp32
+    accumulation) but keeps the *resident tile* at the storage dtype —
+    which is why the bf16 1024x1024 working set fits the 16 MiB budget
+    the fp32 one busts."""
+    plane = float(h) * w * elem_bytes              # one split-complex image
+    total = batch * plane
+    bb = max(1, min(block_batch, batch))
+    grid_steps = math.ceil(batch / bb)
+    tw = fourstep_table_bytes(w, elem_bytes=elem_bytes) \
+        + fourstep_table_bytes(h, elem_bytes=elem_bytes)
+    flops = batch * (_fourstep_pass_flops(w, float(h))
+                     + _fourstep_pass_flops(h, float(w)))
+    if variant == "compensated":
+        tw *= 2
+        flops *= 2
+    # each GEMM pass streams its tile through SRAM ~3x: matmul read +
+    # write plus the inter-factor twiddle round
+    sram_rw = 2 * 3 * total
+    # ping-pong working set: live tile + the pass being written, plus the
+    # staged operand tables
+    high_water = 2 * bb * int(h * w * elem_bytes) + tw
+    return _mk_stage("fused_fft2d", a, flops=flops,
+                     dram_in=total + tw, dram_out=total,
+                     sram_read=sram_rw, sram_write=sram_rw,
+                     sram_high_water=high_water, grid_steps=grid_steps)
+
+
+def _gemm3d_stage(a: Arch, *, d: int, h: int, w: int, batch: int,
+                  block_batch: int, variant: str,
+                  elem_bytes: int) -> TraceStage:
+    """The fused 3-D kernel (:mod:`repro.kernels.fft3d_fused`,
+    ``algo="fused"``): ONE stage for all three four-step GEMM passes on a
+    VMEM-resident (bb, d, h, w) brick — 2 DRAM volume traversals plus
+    three axes of operand tables, both inter-pass relayouts absorbed into
+    left-side contractions (vs the row-column schedule's four full-volume
+    round-trips)."""
+    vol = float(d) * h * w * elem_bytes            # one split-complex volume
+    total = batch * vol
+    bb = max(1, min(block_batch, batch))
+    grid_steps = math.ceil(batch / bb)
+    from repro.kernels.fft3d_fused import fourstep_factors3
+    fw, fh, fd = (fourstep_factors3(w), fourstep_factors3(h),
+                  fourstep_factors3(d))
+    tw = (fourstep_table_bytes(w, elem_bytes=elem_bytes, factors=fw)
+          + fourstep_table_bytes(h, elem_bytes=elem_bytes, factors=fh)
+          + fourstep_table_bytes(d, elem_bytes=elem_bytes, factors=fd))
+    flops = batch * (_fourstep_pass_flops(w, float(d) * h, factors=fw)
+                     + _fourstep_pass_flops(h, float(d) * w, factors=fh)
+                     + _fourstep_pass_flops(d, float(h) * w, factors=fd))
+    if variant == "compensated":
+        tw *= 2
+        flops *= 2
+    sram_rw = 3 * 3 * total
+    high_water = 2 * bb * int(d * h * w * elem_bytes) + tw
+    return _mk_stage("fused_fft3d", a, flops=flops,
+                     dram_in=total + tw, dram_out=total,
+                     sram_read=sram_rw, sram_write=sram_rw,
+                     sram_high_water=high_water, grid_steps=grid_steps)
 
 
 def _rfft_fused2d_stage(a: Arch, *, h: int, w: int, batch: int,

@@ -55,6 +55,29 @@ got3 = np.asarray(to_complex(out3)).transpose(2, 1, 0)   # (Z,Y,X) -> (X,Y,Z)
 ref3 = np.fft.fftn(x3)
 assert np.abs(got3 - ref3).max()/np.abs(ref3).max() < 1e-4
 
+# backend= plumbs through pfft3's local passes to the plan registry (the
+# same routing the single-chip fft3 has).  Z=32 resolves to "naive" and
+# demotes (interned under the jnp key); Z=512 has a four_step kernel path
+# and must intern a live pallas plan.
+from repro.core import plan as plan_lib
+out3p = pencil.pfft3(z3, mesh3, backend="pallas")
+got3p = np.asarray(to_complex(out3p)).transpose(2, 1, 0)
+assert np.abs(got3p - ref3).max()/np.abs(ref3).max() < 1e-4
+pk = plan_lib._plan_key((Z,), jnp.float32, False, "jnp", "c2c")
+assert pk in plan_lib._PLAN_CACHE, "pfft3 demoted Z pass missing from registry"
+
+Zk = 512
+xk = (rng.standard_normal((X, Y, Zk)) + 1j*rng.standard_normal((X, Y, Zk))).astype(np.complex64)
+zk = from_complex(jnp.asarray(xk))
+zk = SplitComplex(jax.device_put(zk.re, sh3), jax.device_put(zk.im, sh3))
+outk = pencil.pfft3(zk, mesh3, backend="pallas")
+gotk = np.asarray(to_complex(outk)).transpose(2, 1, 0)
+refk = np.fft.fftn(xk)
+assert np.abs(gotk - refk).max()/np.abs(refk).max() < 1e-4
+pk = plan_lib._plan_key((Zk,), jnp.float32, False, "pallas", "c2c")
+assert pk in plan_lib._PLAN_CACHE, "pfft3 local Z pass never hit the registry"
+assert plan_lib._PLAN_CACHE[pk].backend == "pallas"
+
 # distributed 1-D four-step, forward + inverse roundtrip
 mesh = make_mesh((8,), ("data",))
 n = 1 << 14

@@ -1,0 +1,171 @@
+"""fft3 registry routing (the plumbing bugfix), the fused 3-D kernel, and
+seeded property sweeps for the 3-D paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fft3, from_complex, to_complex
+from repro.core import plan as P
+from repro.core.complexmath import SplitComplex
+from repro.kernels import ops
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registry():
+    P.clear_plan_cache()
+    yield
+    P.clear_plan_cache()
+
+
+def _rand3d(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape)
+            + 1j * rng.standard_normal(shape)).astype(np.complex64)
+
+
+def _rel(got, ref):
+    return np.abs(got - ref).max() / np.abs(ref).max()
+
+
+# ---------------------------------------------------------------------------
+# The plumbing bugfix: fft3 takes backend= and routes through the registry
+# ---------------------------------------------------------------------------
+
+def test_fft3_backend_routes_through_registry():
+    """fft3(backend="pallas") must intern a (d, h, w) pallas key that
+    resolves to the fused kernel — previously fft3 took no backend and
+    bypassed the registry entirely."""
+    z = _rand3d((8, 16, 32), seed=1)
+    x = from_complex(jnp.asarray(z))
+    ref = np.fft.fftn(z, axes=(-3, -2, -1))
+    got = np.asarray(to_complex(fft3(x, backend="pallas")))
+    assert _rel(got, ref) < 1e-5
+    key = P._plan_key((8, 16, 32), jnp.float32, False, "pallas", "c2c")
+    plan = P._PLAN_CACHE[key]
+    assert plan.backend == "pallas" and plan.algo == "fused"
+    assert plan.demote_reason is None
+    # the jnp request interns its own key, same numbers
+    got_j = np.asarray(to_complex(fft3(x, backend="jnp")))
+    assert _rel(got_j, ref) < 1e-5
+    assert P._plan_key((8, 16, 32), jnp.float32, False, "jnp", "c2c") \
+        in P._PLAN_CACHE
+
+
+def test_fft3_nonpow2_demotes_with_reason():
+    z = _rand3d((6, 16, 32), seed=2)
+    x = from_complex(jnp.asarray(z))
+    got = np.asarray(to_complex(fft3(x, backend="pallas")))
+    assert _rel(got, np.fft.fftn(z, axes=(-3, -2, -1))) < 1e-4
+    plan = P.get_plan((6, 16, 32), backend="pallas")
+    assert plan.backend == "jnp" and plan.algo == "row_col"
+    assert "power-of-two" in plan.demote_reason
+
+
+def test_fft3_rejects_2d_input():
+    x = from_complex(jnp.asarray(_rand3d((8, 8))[None][0]))
+    with pytest.raises(ValueError, match="at least 3 axes"):
+        fft3(x)
+
+
+def test_fft3_explicit_algos_agree():
+    z = _rand3d((8, 16, 16), seed=3)
+    x = from_complex(jnp.asarray(z))
+    ref = np.fft.fftn(z, axes=(-3, -2, -1))
+    for algo, backend in (("fused", "pallas"), ("row_col", "pallas"),
+                          ("row_col", "jnp")):
+        got = np.asarray(to_complex(fft3(x, algo=algo, backend=backend)))
+        assert _rel(got, ref) < 1e-4, (algo, backend)
+    with pytest.raises(ValueError, match="pallas"):
+        fft3(x, algo="fused", backend="jnp")
+
+
+# ---------------------------------------------------------------------------
+# The fused 3-D kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dhw", [(2, 4, 8), (8, 8, 8), (4, 16, 32),
+                                 (32, 16, 4), (16, 16, 16), (32, 32, 32)])
+def test_fused3d_kernel_matches_numpy(dhw):
+    z = _rand3d(dhw, seed=sum(dhw))
+    got = np.asarray(to_complex(ops.fft3d_fused(from_complex(jnp.asarray(z)))))
+    assert _rel(got, np.fft.fftn(z, axes=(-3, -2, -1))) < 1e-5
+
+
+def test_fused3d_leading_batch_and_padding():
+    z = _rand3d((2, 3, 4, 8, 16), seed=5)
+    got = np.asarray(to_complex(ops.fft3d_fused(from_complex(jnp.asarray(z)))))
+    assert _rel(got, np.fft.fftn(z, axes=(-3, -2, -1))) < 1e-5
+    z = _rand3d((3, 8, 8, 8), seed=6)           # ragged batch, bb=2 pads
+    got = np.asarray(to_complex(
+        ops.fft3d_fused(from_complex(jnp.asarray(z)), block_batch=2)))
+    assert _rel(got, np.fft.fftn(z, axes=(-3, -2, -1))) < 1e-5
+
+
+def test_fused3d_empty_batch():
+    x = from_complex(jnp.zeros((0, 4, 4, 4), jnp.complex64))
+    assert ops.fft3d_fused(x).shape == (0, 4, 4, 4)
+
+
+def test_fused3d_bf16_compensated_error_bound():
+    """3-D acceptance bound: compensated bf16 within 5e-3 of fp64 and
+    tighter than the plain cast."""
+    rng = np.random.default_rng(7)
+    shape = (32, 32, 32)
+    zr, zi = rng.standard_normal(shape), rng.standard_normal(shape)
+    ref = np.fft.fftn(zr + 1j * zi)
+    x = SplitComplex(jnp.asarray(zr[None], jnp.bfloat16),
+                     jnp.asarray(zi[None], jnp.bfloat16))
+    errs = {}
+    for variant in ("plain", "compensated"):
+        out = ops.fft3d_fused(x, variant=variant)
+        got = (np.asarray(out.re, np.float64)
+               + 1j * np.asarray(out.im, np.float64))[0]
+        errs[variant] = np.linalg.norm(got - ref) / np.linalg.norm(ref)
+    assert errs["compensated"] <= 5e-3, errs
+    assert errs["compensated"] < errs["plain"], errs
+
+
+# ---------------------------------------------------------------------------
+# Seeded property sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fft3_property_sweep(backend):
+    """Seeded sweep across pow2 shapes (kernel path), non-pow2 shapes
+    (demote path) and ragged batches: forward matches the fp64 numpy
+    reference and forward∘inverse returns the input."""
+    rng = np.random.default_rng(11)
+    cases = [((), (4, 8, 16)), ((3,), (8, 8, 8)), ((2, 2), (2, 4, 4)),
+             ((), (6, 8, 8)), ((5,), (4, 12, 10))]     # last two demote
+    for lead, dhw in cases:
+        shape = lead + dhw
+        zr = rng.standard_normal(shape)
+        zi = rng.standard_normal(shape)
+        ref = np.fft.fftn(zr + 1j * zi, axes=(-3, -2, -1))
+        x = SplitComplex(jnp.asarray(zr, jnp.float32),
+                         jnp.asarray(zi, jnp.float32))
+        y = fft3(x, backend=backend)
+        got = np.asarray(y.re, np.float64) + 1j * np.asarray(y.im, np.float64)
+        assert np.linalg.norm(got - ref) / np.linalg.norm(ref) < 1e-5, \
+            (backend, shape)
+        back = fft3(y, inverse=True, backend=backend)
+        gotb = (np.asarray(back.re, np.float64)
+                + 1j * np.asarray(back.im, np.float64))
+        assert np.linalg.norm(gotb - (zr + 1j * zi)) \
+            / np.linalg.norm(zr + 1j * zi) < 1e-5, (backend, shape)
+
+
+def test_fft3_inverse_plan_interned_separately():
+    z = _rand3d((4, 8, 8), seed=9)
+    x = from_complex(jnp.asarray(z))
+    fft3(x, backend="pallas")
+    fft3(x, inverse=True, backend="pallas")
+    fwd = P._plan_key((4, 8, 8), jnp.float32, False, "pallas", "c2c")
+    inv = P._plan_key((4, 8, 8), jnp.float32, True, "pallas", "c2c")
+    assert fwd in P._PLAN_CACHE and inv in P._PLAN_CACHE
+    assert P._PLAN_CACHE[fwd] is not P._PLAN_CACHE[inv]
+
+
+def test_rfft_3d_plan_rejected():
+    with pytest.raises(ValueError, match="rfft plans are 1-D or 2-D"):
+        P.get_plan((4, 8, 8), kind="rfft")

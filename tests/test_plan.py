@@ -281,3 +281,60 @@ def test_wisdom_autoload_unset_missing_and_corrupt(tmp_path):
         corrupt.write_text(text)
         count, source, tuned_runs = _import_with_wisdom_env(str(corrupt))
         assert (count, source, tuned_runs) == (0, "measured", 1), text
+
+
+def test_wisdom_v3_variant_roundtrip_subprocess(tmp_path):
+    """Wisdom v3 carries the GEMM precision variant: a bf16 key tuned to
+    "compensated" must come back "compensated" in a fresh process (v2
+    files silently resurrected plain-table winners, which is the bug the
+    version bump guards against)."""
+    import dataclasses
+    import json
+    import os
+    import subprocess
+    import sys
+    from repro.core import plan as plan_mod
+    path = str(tmp_path / "wisdom.json")
+    clear_plan_cache()
+    auto = get_plan((64, 64), backend="pallas", dtype=jnp.bfloat16)
+    assert auto.variant == "compensated"
+    key = plan_mod._plan_key((64, 64), jnp.bfloat16, False, "pallas", "c2c")
+    plan_mod._PLAN_CACHE[key] = dataclasses.replace(
+        auto, tuned=True, tune_report={"winner": "default"})
+    assert save_wisdom(path) == 1
+    entry = json.load(open(path))["entries"][0]
+    assert entry["variant"] == "compensated"
+    clear_plan_cache()
+    # fresh interpreter: autoload via $REPRO_FFT_WISDOM, report the variant
+    code = (
+        "import jax.numpy as jnp\n"
+        "from repro.core import plan as P\n"
+        "pl = P.get_plan((64, 64), backend='pallas', dtype=jnp.bfloat16,"
+        " tune=True)\n"
+        "print('VAR', pl.variant, pl.tuned,"
+        " (pl.tune_report or {}).get('source'))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["REPRO_FFT_WISDOM"] = path
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("VAR")][0]
+    assert line.split() == ["VAR", "compensated", "True", "wisdom"]
+    # a v2 file (no variant in hash) is refused outright, never half-loaded
+    data = json.load(open(path))
+    data["version"] = 2
+    json.dump(data, open(path, "w"))
+    assert load_wisdom(path) == 0
+    with pytest.raises(ValueError, match="version"):
+        load_wisdom(path, strict=True)
+    # tampering with the variant field breaks the v3 hash guard
+    data["version"] = plan_mod.WISDOM_VERSION
+    data["entries"][0]["variant"] = "plain"
+    json.dump(data, open(path, "w"))
+    assert load_wisdom(path) == 0
+    with pytest.raises(ValueError, match="hash"):
+        load_wisdom(path, strict=True)
+    clear_plan_cache()

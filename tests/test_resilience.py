@@ -236,6 +236,49 @@ def test_disabled_resilience_is_passthrough():
                                       "last_reason": None}
 
 
+def test_bf16_full_guards_dtype_aware_tolerances():
+    """A *healthy* bf16 kernel execution under full guards must never walk
+    the circuit breaker into runtime_circuit_open: both the Parseval and
+    the Hermitian tolerance are picked by plan dtype (the lowp knobs), so
+    bf16 quantisation noise is not misread as corruption — while an
+    *injected* fault still trips the same guard stack."""
+    rng = np.random.default_rng(3)
+    xr = jnp.asarray(rng.standard_normal((64, 64)), jnp.bfloat16)
+    rpl = P.get_plan((64, 64), kind="rfft", backend="pallas",
+                     dtype=jnp.bfloat16)
+    y = rpl._execute(xr)
+    assert guards.check_output(rpl, xr, y, level="full").ok
+    # the tolerance *selection* is dtype-aware: shrinking the lowp knob to
+    # zero trips the very same healthy output, shrinking the fp32 knob
+    # (what a bf16 plan must NOT consult) changes nothing
+    with rconfig.overrides(hermitian_tol_lowp=0.0, parseval_tol_lowp=0.0):
+        assert not guards.check_output(rpl, xr, y, level="full").ok
+    with rconfig.overrides(hermitian_tol=0.0, parseval_tol=0.0):
+        assert guards.check_output(rpl, xr, y, level="full").ok
+    # lifecycle: healthy bf16 GEMM executions at threshold=1 keep the
+    # breaker closed and the registry entry un-demoted
+    rconfig.configure(failure_threshold=1, guard_level="full")
+    xc = SplitComplex(jnp.asarray(rng.standard_normal((64, 64)), jnp.bfloat16),
+                      jnp.asarray(rng.standard_normal((64, 64)), jnp.bfloat16))
+    cpl = P.get_plan((64, 64), backend="pallas", dtype=jnp.bfloat16)
+    assert cpl.variant == "compensated"          # the auto bf16 GEMM path
+    key = P._plan_key((64, 64), jnp.bfloat16, False, "pallas", "c2c")
+    for _ in range(3):
+        cpl(xc)
+    assert policy.breaker_state(key) in (None, "closed")   # never opened
+    assert executor.stats(key)["failures"] == 0
+    healthy = P.get_plan((64, 64), backend="pallas", dtype=jnp.bfloat16)
+    assert healthy.backend == "pallas" and healthy.demote_reason is None
+    # ...and the relaxed lowp tolerances still catch real corruption: one
+    # injected output fault fails the guards and opens the circuit
+    with faults.inject("plan.output", "corrupt"):
+        cpl(xc)
+    assert policy.breaker_state(key) == "open"
+    assert P.get_plan((64, 64), backend="pallas",
+                      dtype=jnp.bfloat16).demote_reason \
+        == RUNTIME_DEMOTE_REASON
+
+
 # ---------------------------------------------------------------------------
 # Autotune watchdog
 # ---------------------------------------------------------------------------

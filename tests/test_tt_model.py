@@ -186,18 +186,27 @@ def test_ranking_consistency_predicted_vs_measured(size, batch):
 
 
 def test_vmem_high_water_regression_1024_fused():
-    """Pin the fused kernel's 1024x1024 VMEM footprint (ROADMAP): the tile
-    is 8 MiB of split-complex f32, the Stockham ping-pong doubles it, and
-    the packed twiddle tables add 2 x 30 KiB — just over the 16 MiB v5e
+    """Pin the GEMM fused kernel's 1024x1024 VMEM footprint (ROADMAP): the
+    tile is 8 MiB of split-complex f32, the pass ping-pong doubles it, and
+    the four-step operand tables add 2 x 24 KiB — just over the 16 MiB v5e
     VMEM budget, so the model must flag it instead of assuming it fits."""
     t = tttrace.trace_plan(_fused(1024), arch="tpu_v5e")
     tile = 1024 * 1024 * 8                  # re+im f32 plane
-    twiddles = 2 * (2 * 5 * 3 * (1024 // 4) * 4)
-    assert tile == 8 * MIB
-    assert t.sram_high_water == 2 * tile + twiddles == 16838656
+    tables = 2 * tttrace.fourstep_table_bytes(1024)   # both axes
+    assert tile == 8 * MIB and tables == 49152
+    assert t.sram_high_water == 2 * tile + tables == 16826368
     assert t.sram_budget == 16 * MIB
     assert not t.fits
     assert tttrace.predict_cost(_fused(1024), arch="tpu_v5e") == float("inf")
+    # the Stockham-stage oracle (algo="fused_stockham") keeps its own pin:
+    # packed per-stage twiddles instead of the dense four-step tables
+    o = tttrace.trace_plan(
+        FFTPlan(shape=(1024, 1024), algo="fused_stockham", backend="pallas",
+                block_batch=1), arch="tpu_v5e")
+    assert [s.name for s in o.stages] == ["fused_fft2d_stockham"]
+    twiddles = 2 * (2 * 5 * 3 * (1024 // 4) * 4)
+    assert o.sram_high_water == 2 * tile + twiddles == 16838656
+    assert not o.fits
     # ...while 512x512 fits comfortably, and block_batch=4 (on a batch that
     # actually sustains it — block_batch clamps to the batch) busts it again
     assert tttrace.trace_plan(_fused(512), arch="tpu_v5e").fits
@@ -209,9 +218,10 @@ def test_vmem_high_water_regression_1024_fused():
 
 def test_trace_bf16_plans_halve_movement_golden():
     """Golden pin (ROADMAP: teach the tracer about bf16 plans): a bfloat16
-    fused 1024^2 plan traces at exactly half the fp32 DRAM/SRAM bytes, its
-    VMEM high-water drops from the pinned 16838656 B to 8419328 B, and the
-    PR 3 "does 1024x1024 fit in 16 MiB v5e VMEM?" answer flips to True."""
+    GEMM fused 1024^2 plan traces at exactly half the fp32 DRAM/SRAM
+    bytes, its VMEM high-water drops from the pinned 16826368 B to
+    8413184 B, and the PR 3 "does 1024x1024 fit in 16 MiB v5e VMEM?"
+    answer flips to True."""
     f32 = tttrace.trace_plan(_fused(1024), arch="tpu_v5e")
     bf16 = tttrace.trace_plan(
         FFTPlan(shape=(1024, 1024), dtype="bfloat16", algo="fused",
@@ -220,8 +230,8 @@ def test_trace_bf16_plans_halve_movement_golden():
     assert tttrace.plan_elem_bytes(
         FFTPlan(shape=(1024, 1024), dtype="bfloat16", algo="fused",
                 backend="pallas")) == 4
-    assert f32.sram_high_water == 16838656 and not f32.fits
-    assert bf16.sram_high_water == 16838656 // 2 == 8419328
+    assert f32.sram_high_water == 16826368 and not f32.fits
+    assert bf16.sram_high_water == 16826368 // 2 == 8413184
     assert bf16.fits and bf16.sram_budget == 16 * MIB
     assert bf16.dram_bytes == f32.dram_bytes / 2
     s32, s16 = f32.stages[0], bf16.stages[0]
@@ -239,6 +249,54 @@ def test_trace_bf16_plans_halve_movement_golden():
         FFTPlan(shape=(512, 512), dtype="bfloat16", algo="row_col",
                 backend="pallas", block_batch=8), arch="wormhole_n300")
     assert r16.noc_bytes == r32.noc_bytes / 2
+
+
+def test_vmem_bf16_compensated_1024_fits():
+    """THE acceptance pin of the GEMM-first core: the precision-compensated
+    bf16 1024x1024 plan — split hi/lo operand tables (2x table bytes, 2x
+    table flops) but a bf16 resident tile — fits the 16 MiB v5e VMEM
+    budget the fp32 plan busts, at exactly the plain-bf16 tile footprint
+    plus one extra copy of the tables."""
+    plain = FFTPlan(shape=(1024, 1024), dtype="bfloat16", algo="fused",
+                    backend="pallas", block_batch=1, variant="plain")
+    comp = dataclasses.replace(plain, variant="compensated")
+    tp = tttrace.trace_plan(plain, arch="tpu_v5e")
+    tc = tttrace.trace_plan(comp, arch="tpu_v5e")
+    tables = 2 * tttrace.fourstep_table_bytes(1024, elem_bytes=4)
+    assert tp.sram_high_water == 2 * 1024 * 1024 * 4 + tables == 8413184
+    assert tc.sram_high_water == tp.sram_high_water + tables == 8437760
+    assert tc.fits and tc.variant == "compensated"
+    assert tc.flops == 2 * tp.flops          # split-pair reconstruction
+    assert tc.dram_bytes == tp.dram_bytes + tables
+    assert tttrace.predict_cost(comp, arch="tpu_v5e") < float("inf")
+    d = tc.to_dict()
+    assert d["variant"] == "compensated" and d["fits"]
+
+
+def test_trace_fused3d_single_stage_vs_row_col():
+    """The fused 3-D kernel traces to ONE stage with 2 DRAM volume
+    traversals + tables; the row-column schedule pays three passes and
+    four relayout round-trips, and the model must rank fused ahead on
+    both archs."""
+    f = FFTPlan(shape=(64, 64, 64), algo="fused", backend="pallas",
+                block_batch=1)
+    r = FFTPlan(shape=(64, 64, 64), algo="row_col", backend="pallas",
+                block_batch=8)
+    tf = tttrace.trace_plan(f, arch="tpu_v5e", batch=2)
+    tr = tttrace.trace_plan(r, arch="tpu_v5e", batch=2)
+    assert [s.name for s in tf.stages] == ["fused_fft3d"]
+    assert [s.name for s in tr.stages] == [
+        "w_fft", "transpose_wh_in", "h_fft", "transpose_wh_out",
+        "transpose_wd_in", "d_fft", "transpose_wd_out"]
+    vol = 2 * 64 ** 3 * 8                      # batch x split-complex f32
+    tables = 3 * tttrace.fourstep_table_bytes(64)
+    assert tf.dram_bytes == 2 * vol + tables
+    assert tf.dram_bytes < tr.dram_bytes       # four round-trips vs none
+    assert tf.sram_high_water == 64 ** 3 * 8 * 2 + tables
+    assert tf.fits
+    for arch in ("wormhole_n300", "tpu_v5e"):
+        assert tttrace.predict_cost(f, arch=arch, batch=2) < \
+            tttrace.predict_cost(r, arch=arch, batch=2)
 
 
 def test_trace_dist_pencil_schedule_golden():
@@ -361,7 +419,7 @@ def test_vmem_high_water_fused_rfft_1024_fits():
     assert tttrace.predict_cost(rfused, arch="tpu_v5e") < float("inf")
     # the complex golden next door stays pinned (and busted)
     c = tttrace.trace_plan(_fused(1024), arch="tpu_v5e")
-    assert c.sram_high_water == 16838656 and not c.fits
+    assert c.sram_high_water == 16826368 and not c.fits
     # HBM bytes: one real plane + one half spectrum ~ half the complex
     # kernel's two full planes
     ratio = t.dram_bytes / c.dram_bytes
