@@ -2,32 +2,42 @@
 hubert-xlarge stub (the assignment stubs the waveform frontend; this shows
 the paper's kernel producing the frame features such a frontend computes).
 
-    PYTHONPATH=src python examples/audio_frontend.py
+    PYTHONPATH=src python examples/audio_frontend.py [--backend pallas]
 """
+import sys
+
 import jax.numpy as jnp
 import numpy as np
 
 import repro.core as rc
 
 
-def stft(wave: jnp.ndarray, frame: int = 512, hop: int = 160):
-    """Frames (..., T) -> magnitude spectrogram (..., n_frames, frame//2+1)."""
+def stft(wave: jnp.ndarray, frame: int = 512, hop: int = 160,
+         backend: str = "jnp"):
+    """Frames (..., T) -> magnitude spectrogram (..., n_frames, frame//2+1).
+
+    The per-frame rfft routes through the plan registry; ``backend="pallas"``
+    requests the kernel path for the (frame,) rfft key (demoting with a
+    registry-visible reason when no kernel schedule exists)."""
     t = wave.shape[-1]
     n_frames = 1 + (t - frame) // hop
     idx = np.arange(frame)[None, :] + hop * np.arange(n_frames)[:, None]
     frames = wave[..., idx]                                # gather windows
     window = jnp.asarray(np.hanning(frame), jnp.float32)
-    spec = rc.rfft(frames * window)
+    spec = rc.rfft(frames * window, backend=backend)
     return jnp.sqrt(spec.re ** 2 + spec.im ** 2)
 
 
 def main():
+    backend = "jnp"
+    if "--backend" in sys.argv:
+        backend = sys.argv[sys.argv.index("--backend") + 1]
     rng = np.random.default_rng(0)
     sr = 16_000
     t = np.arange(sr, dtype=np.float32) / sr
     wave = (np.sin(2 * np.pi * 440 * t) + 0.5 * np.sin(2 * np.pi * 1320 * t)
             + 0.1 * rng.standard_normal(sr).astype(np.float32))
-    mag = stft(jnp.asarray(wave))
+    mag = stft(jnp.asarray(wave), backend=backend)
     print(f"waveform {wave.shape} -> spectrogram {mag.shape}")
     peaks = np.asarray(jnp.argmax(mag, axis=-1))
     freq_resolution = sr / 512

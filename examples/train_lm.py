@@ -4,6 +4,12 @@ with checkpointing and resume.
 
     PYTHONPATH=src python examples/train_lm.py [--steps 200]
 
+``--ssm`` swaps in the small Mamba2 config whose causal-conv branch runs
+through the fused spectral-convolution plan (``ssm_demo``:
+``use_fft_conv=True``, ``fft_backend="pallas"``); pair it with
+``--fft-backend jnp`` for a tokens/sec A/B of the conv backends — the
+driver prints steady-state tokens/sec either way.
+
 This drives the same launcher a cluster run uses:
     python -m repro.launch.train --arch fnet_demo --steps 200 ...
 Scale up by dropping --reduced and binding --mesh single|multi.
@@ -14,11 +20,18 @@ from repro.launch import train as train_mod
 
 
 def main():
-    argv = ["--arch", "fnet_demo", "--reduced",
-            "--steps", "200", "--seq-len", "128", "--global-batch", "8",
-            "--lr", "3e-3", "--ckpt-dir", "runs/ckpt_example",
-            "--ckpt-every", "100", "--log-every", "20"]
     extra = sys.argv[1:]
+    if "--ssm" in extra:
+        extra = [a for a in extra if a != "--ssm"]
+        argv = ["--arch", "ssm_demo", "--reduced",
+                "--steps", "60", "--seq-len", "128", "--global-batch", "8",
+                "--lr", "3e-3", "--ckpt-dir", "runs/ckpt_example_ssm",
+                "--ckpt-every", "0", "--log-every", "20"]
+    else:
+        argv = ["--arch", "fnet_demo", "--reduced",
+                "--steps", "200", "--seq-len", "128", "--global-batch", "8",
+                "--lr", "3e-3", "--ckpt-dir", "runs/ckpt_example",
+                "--ckpt-every", "100", "--log-every", "20"]
     sys.argv = [sys.argv[0]] + argv + extra
     train_mod.main()
 

@@ -13,13 +13,13 @@ from repro.models.config import ModelConfig
 
 from . import (fnet_demo, h2o_danube_18b, hubert_xlarge, internvl2_76b,
                nemotron4_340b, phi35_moe, qwen15_4b, qwen3_moe_235b,
-               starcoder2_15b, xlstm_350m, zamba2_27b)
+               ssm_demo, starcoder2_15b, xlstm_350m, zamba2_27b)
 
 REGISTRY: Dict[str, ModelConfig] = {
     c.CONFIG.name: c.CONFIG
     for c in (qwen3_moe_235b, phi35_moe, internvl2_76b, h2o_danube_18b,
               nemotron4_340b, qwen15_4b, starcoder2_15b, zamba2_27b,
-              hubert_xlarge, xlstm_350m, fnet_demo)
+              hubert_xlarge, xlstm_350m, fnet_demo, ssm_demo)
 }
 
 ASSIGNED = [

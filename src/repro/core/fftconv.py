@@ -2,13 +2,33 @@
 
 The LM-integration point of the paper's technique (DESIGN.md §4): SSM/hybrid
 mixers evaluate their long-convolution view through the FFT library instead
-of a direct O(L*K) conv.  Built entirely from :mod:`repro.core.fft1d`; with
-``algo="auto"`` every rfft/irfft below routes through the plan registry
-(the packed half-size complex transform of length m/2 is the cached key),
-so repeated convolutions at one length reuse a single resolved plan.
+of a direct O(L*K) conv.
+
+With ``algo="auto"`` every convolution routes through a **conv-kind plan**
+(:mod:`repro.core.plan`, ``kind="conv_causal"`` / ``"conv_circular"``),
+keyed on the padded FFT length, dtype, backend and mode.  On
+``backend="pallas"`` the plan runs the fused spectral-convolution kernel
+(:mod:`repro.kernels.fftconv_fused`): forward rfft, pointwise multiply and
+inverse irfft in ONE VMEM-resident pass — the spectrum never touches HBM,
+versus the six half/full planes the unfused rfft -> ``cm.mul`` -> irfft
+composition ships per call.  Lengths with no kernel path (non-power-of-two
+circular lengths, tiny m) demote to the registry-composed unfused schedule
+with a registry-visible ``demote_reason``.
+
+The **filter half spectrum is cached per plan key**: repeated eager calls
+at one length with the same (static) filter object — exactly the
+SSM/Hyena serving pattern — skip the kernel-side rfft entirely
+(``SPECTRUM_STATS`` counts computes vs hits).  Traced filters (jit-time
+parameters, which change value every training step) bypass the cache; the
+spectrum compute is then part of the traced graph, paid once per
+compilation, and recomputing it per step is semantically required.
+
+An explicit ``algo=`` (e.g. ``"stockham"``) keeps the historical direct
+path: rfft/irfft with that inner algo, no conv plan, no caching.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -20,31 +40,105 @@ def _next_pow2(n: int) -> int:
     return 1 << int(np.ceil(np.log2(max(n, 1))))
 
 
+# -- per-plan filter-spectrum cache -----------------------------------------
+
+_SPECTRUM_CACHE = {}   # spectrum key -> (filter array, its half spectrum)
+SPECTRUM_STATS = {}    # spectrum key -> {"computes": int, "hits": int}
+
+
+def _spectrum_key(plan):
+    return (plan.shape, plan.dtype, plan.kind, plan.backend, plan.algo)
+
+
+def clear_spectrum_cache() -> None:
+    """Drop every cached filter spectrum (called by
+    :func:`repro.core.plan.clear_plan_cache` — spectra key on plans) and
+    the fused kernel's packed-domain filter cache (packed operands derive
+    from spectra)."""
+    _SPECTRUM_CACHE.clear()
+    SPECTRUM_STATS.clear()
+    from repro.kernels import fftconv_fused as _fconv
+    _fconv.clear_pack_cache()
+
+
+def _compute_kf(k, m: int) -> cm.SplitComplex:
+    kp = jnp.pad(k, [(0, 0)] * (k.ndim - 1) + [(0, m - k.shape[-1])])
+    return fft1d.rfft(kp)              # jnp registry key: one-time cost
+
+
+def _filter_spectrum(plan, k, m: int) -> cm.SplitComplex:
+    """The filter's half spectrum at the plan's padded length, cached per
+    plan key for static (eager) filters.  The hit test is object identity:
+    callers holding one filter array across calls — the serving pattern —
+    hit; a fresh array recomputes and replaces the entry (never staler
+    than the filter actually passed)."""
+    if isinstance(k, jax.core.Tracer):
+        return _compute_kf(k, m)       # traced params change every step
+    key = _spectrum_key(plan)
+    stats = SPECTRUM_STATS.setdefault(key, {"computes": 0, "hits": 0})
+    ent = _SPECTRUM_CACHE.get(key)
+    if ent is not None and ent[0] is k:
+        stats["hits"] += 1
+        return ent[1]
+    kf = _compute_kf(k, m)
+    _SPECTRUM_CACHE[key] = (k, kf)
+    stats["computes"] += 1
+    return kf
+
+
+# -- public entry points -----------------------------------------------------
+
+def _conv_plan(x, k, *, m: int, out_len: int, kind: str, backend: str):
+    from . import plan as _plan        # deferred: plan imports fftconv
+    plan = _plan.get_plan((m,), dtype=x.dtype, kind=kind, backend=backend)
+    kf = _filter_spectrum(plan, k, m)
+    L = x.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, m - L)]) if m > L else x
+    y = plan(xp, kf)
+    return y[..., :out_len]
+
+
+def _conv_direct(x, k, *, m: int, out_len: int, algo: str, backend: str):
+    """The historical explicit-algo path: rfft -> mul -> irfft with the
+    requested inner algo, no conv plan, no spectrum caching."""
+    L, K = x.shape[-1], k.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, m - L)])
+    kp = jnp.pad(k, [(0, 0)] * (k.ndim - 1) + [(0, m - K)])
+    xf = fft1d.rfft(xp, algo=algo, backend=backend)
+    kf = fft1d.rfft(kp, algo=algo, backend=backend)
+    y = fft1d.irfft(cm.mul(xf, kf), m, algo=algo, backend=backend)
+    return y[..., :out_len]
+
+
 def fft_conv(x: jnp.ndarray, k: jnp.ndarray, *, causal: bool = True,
-             algo: str = "auto") -> jnp.ndarray:
+             algo: str = "auto", backend: str = "jnp") -> jnp.ndarray:
     """Convolve signal x (..., L) with kernel k (..., K) via rfft.
 
     causal=True returns y[t] = sum_{s<=t} x[s] k[t-s] truncated to length L
-    (the long-conv form used by SSM token mixers).
+    (the long-conv form used by SSM token mixers).  ``backend="pallas"``
+    routes the ``kind="conv_causal"`` plan to the fused VMEM-resident
+    kernel; demotions keep a registry-visible ``demote_reason``.
     """
     L = x.shape[-1]
     K = k.shape[-1]
     m = _next_pow2(L + K - 1)
-    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, m - L)])
-    kp = jnp.pad(k, [(0, 0)] * (k.ndim - 1) + [(0, m - K)])
-    xf = fft1d.rfft(xp, algo=algo)
-    kf = fft1d.rfft(kp, algo=algo)
-    yf = cm.mul(xf, kf)
-    y = fft1d.irfft(yf, m, algo=algo)
-    if causal:
-        return y[..., :L]
-    return y[..., : L + K - 1]
+    out_len = L if causal else L + K - 1
+    if algo != "auto":
+        return _conv_direct(x, k, m=m, out_len=out_len, algo=algo,
+                            backend=backend)
+    return _conv_plan(x, k, m=m, out_len=out_len, kind="conv_causal",
+                      backend=backend)
 
 
-def circular_conv(x: jnp.ndarray, k: jnp.ndarray, *,
-                  algo: str = "auto") -> jnp.ndarray:
-    """Circular convolution of equal-length real signals."""
+def circular_conv(x: jnp.ndarray, k: jnp.ndarray, *, algo: str = "auto",
+                  backend: str = "jnp") -> jnp.ndarray:
+    """Circular convolution of equal-length real signals.  The FFT length
+    is the signal length itself, so non-power-of-two lengths demote the
+    pallas request to the unfused jnp schedule (registry-visible)."""
     assert x.shape[-1] == k.shape[-1]
-    xf = fft1d.rfft(x, algo=algo)
-    kf = fft1d.rfft(k, algo=algo)
-    return fft1d.irfft(cm.mul(xf, kf), x.shape[-1], algo=algo)
+    m = x.shape[-1]
+    if algo != "auto":
+        return _conv_direct(x, k, m=m, out_len=m, algo=algo,
+                            backend=backend)
+    return _conv_plan(x, k, m=m, out_len=m, kind="conv_circular",
+                      backend=backend)

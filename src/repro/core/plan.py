@@ -80,7 +80,12 @@ _PLAN_CACHE: Dict[PlanKey, "FFTPlan"] = {}      # algo="auto" plans
 _OVERRIDE_CACHE: Dict[tuple, "FFTPlan"] = {}    # (key, algo, radix) overrides
 _AUTOTUNE_RUNS: Dict[tuple, int] = {}
 
-PLAN_KINDS = ("c2c", "rfft")
+# conv-kind plans fuse rfft -> pointwise multiply -> irfft over one padded
+# FFT length; the causal/circular mode is part of the kind (and therefore
+# the key), because the two modes pad — and therefore cache — different
+# filter spectra at the same length
+CONV_KINDS = ("conv_causal", "conv_circular")
+PLAN_KINDS = ("c2c", "rfft") + CONV_KINDS
 
 
 def _plan_key(shape, dtype, inverse, backend, kind="c2c") -> PlanKey:
@@ -125,19 +130,23 @@ class FFTPlan:
 
     # -- execution -----------------------------------------------------------
 
-    def __call__(self, x) -> SplitComplex:
+    def __call__(self, x, *args) -> SplitComplex:
         """Execute through the guarded executor
         (:mod:`repro.resilience.executor`): eager kernel executions are
         integrity-checked and fall back to the jnp schedule on failure
         (repeated failures open the key's circuit breaker and demote the
         registry entry with ``demote_reason="runtime_circuit_open"``);
         traced calls — and disabled resilience — take the raw path
-        unchanged."""
+        unchanged.  conv-kind plans take the filter half spectrum as a
+        second operand: ``plan(x, kf)``."""
         from repro.resilience import executor as _rexec
-        return _rexec.execute(self, x)
+        return _rexec.execute(self, x, *args)
 
-    def _execute(self, x) -> SplitComplex:
+    def _execute(self, x, *args) -> SplitComplex:
         """The raw execution path (no guards, no fallback)."""
+        if self.kind in CONV_KINDS:
+            return self._call_conv(x, *args)
+        assert not args, "only conv-kind plans take extra operands"
         if self.kind == "rfft":
             return self._call_rfft(x)
         assert x.shape[-self.ndim:] == self.shape, (x.shape, self.shape)
@@ -205,6 +214,24 @@ class FFTPlan:
         return fft2d._rfft2_direct(x, row_algo=self.algo, col_algo=col,
                                    backend=self.backend)
 
+    def _call_conv(self, x, kf):
+        """Execute a conv plan: circularly convolve real signals x (..., m)
+        with the filter half spectra kf (..., m//2+1) over the plan's
+        padded FFT length m.  ``algo="fused"`` runs the VMEM-resident
+        pallas kernel (:mod:`repro.kernels.fftconv_fused`) — spectrum
+        never touches HBM; ``algo="unfused"`` is the registry-composed
+        rfft -> mul -> irfft baseline (the demotion and runtime-fallback
+        target).  Causal padding/truncation happens upstream in
+        :func:`repro.core.fftconv.fft_conv`."""
+        m = self.n
+        assert x.shape[-1] == m, (x.shape, self.shape)
+        if self.algo == "fused":
+            from repro.kernels import ops as kops
+            return kops.fftconv_fused(x, kf, block_batch=self.block_batch)
+        from . import complexmath as cm
+        xf = fft1d.rfft(x, backend=self.backend)
+        return fft1d.irfft(cm.mul(xf, kf), m, backend=self.backend)
+
 
 # ---------------------------------------------------------------------------
 # Registry
@@ -260,6 +287,13 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     if kind == "rfft" and len(shape) == 3:
         raise ValueError("rfft plans are 1-D or 2-D; 3-D real transforms "
                          "compose rfft2 with a c2c depth pass")
+    if kind in CONV_KINDS:
+        if len(shape) != 1:
+            raise ValueError("conv plans are 1-D (keyed on the padded FFT "
+                             f"length), got {shape}")
+        if inverse:
+            raise ValueError("conv plans have no inverse direction (the "
+                             "irfft is fused inside the plan)")
     # the kernels need power-of-two tile dims of at least 2 (a unit dim
     # would underflow the tile asserts) — anything else demotes to jnp
     kernel_ok = all(_is_pow2(d) and d >= 2 for d in shape)
@@ -267,7 +301,26 @@ def get_plan(shape, *, dtype=jnp.float32, inverse: bool = False,
     fixed_radix = False
     demote = None
 
-    if kind == "rfft":
+    if kind in CONV_KINDS:
+        m = shape[0]
+        if backend == "pallas" and not (_is_pow2(m) and m >= 4):
+            demote = ("fused conv kernel needs a power-of-two FFT length "
+                      f">= 4, got {m}")
+            if algo == "fused":
+                algo = "auto"         # fused demotes with its backend
+            backend = "jnp"
+        if algo == "auto":
+            resolved = "fused" if backend == "pallas" else "unfused"
+        else:
+            resolved = algo
+        if backend == "jnp" and resolved == "fused":
+            raise ValueError('algo="fused" requires backend="pallas" (the '
+                             'fused conv kernel has no jnp equivalent)')
+        if resolved not in ("fused", "unfused"):
+            raise ValueError(f'algo={resolved!r} is not a conv plan algo; '
+                             'use "fused", "unfused" or "auto"')
+        block_batch = 1 if resolved == "fused" else 8
+    elif kind == "rfft":
         n = shape[-1]
         if n % 2:
             raise ValueError(f"rfft plans need an even last dim, "
@@ -386,6 +439,8 @@ def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _OVERRIDE_CACHE.clear()
     _AUTOTUNE_RUNS.clear()
+    from . import fftconv as _fftconv   # deferred: fftconv imports plan
+    _fftconv.clear_spectrum_cache()     # per-plan filter spectra key on plans
 
 
 # -- runtime demotion (driven by the resilience circuit breaker) ------------
@@ -721,7 +776,7 @@ def _watchdog_call(work, timeout_s: Optional[float]):
 
 def _time_candidates(plans, x: SplitComplex, *, warmup: int = 1,
                      iters: int = 5, labels=None,
-                     timeout_s: Optional[float] = None):
+                     timeout_s: Optional[float] = None, extra=()):
     """Best-of-iters wall time (us) per candidate, measured round-robin so
     machine-load drift hits every candidate equally instead of whichever
     happened to run during a busy stretch.
@@ -735,7 +790,7 @@ def _time_candidates(plans, x: SplitComplex, *, warmup: int = 1,
     from repro.resilience import faults as _faults
     labels = labels if labels is not None else [str(i) for i in
                                                 range(len(plans))]
-    fns = [jax.jit(lambda q, p=p: p(q)) for p in plans]
+    fns = [jax.jit(lambda q, p=p: p(q, *extra)) for p in plans]
     best = [float("inf")] * len(fns)
     dead = [False] * len(fns)
     timed_out = []
@@ -784,6 +839,26 @@ def _candidates(plan: FFTPlan, *, fixed_algo: bool = False,
     would time a strictly larger workload."""
     base = dataclasses.replace
     out = [("default", plan)]
+    if plan.kind in CONV_KINDS:
+        if plan.backend != "pallas":
+            # unfused jnp conv composes rfft/irfft keys that tune
+            # independently; nothing plan-level to vary here
+            return out
+        for bb in sorted({min(b, batch) for b in (1, 2)}):
+            out.append((f"fused/bb{bb}",
+                        base(plan, algo="fused", block_batch=bb)))
+        # the registry-composed unfused path as the cross-backend baseline
+        out.append(("unfused/jnp", base(plan, backend="jnp", algo="unfused",
+                                        block_batch=8)))
+        if fixed_algo:
+            out = [(lbl, c) for lbl, c in out if c.algo == plan.algo]
+        seen, uniq = set(), []
+        for lbl, c in out:
+            cfg = (c.algo, c.radix, c.block_batch, c.backend)
+            if cfg not in seen:
+                seen.add(cfg)
+                uniq.append((lbl, c))
+        return uniq
     if plan.kind == "rfft":
         if plan.backend != "pallas":
             # jnp rfft wraps an inner c2c transform whose own key is tuned
@@ -927,7 +1002,15 @@ def _autotune(key, plan: FFTPlan, *, batch: int = 8,
     rng = np.random.default_rng(0)
     shp = (batch,) + plan.shape
     dt = jnp.dtype(plan.dtype)
-    if plan.kind == "rfft":
+    extra = ()
+    if plan.kind in CONV_KINDS:
+        # real signals (batch rows of the padded length) convolved against
+        # one shared synthetic filter half spectrum — the second operand
+        x = jnp.asarray(rng.standard_normal(shp), dt)
+        hshp = (plan.n // 2 + 1,)
+        extra = (SplitComplex(jnp.asarray(rng.standard_normal(hshp), dt),
+                              jnp.asarray(rng.standard_normal(hshp), dt)),)
+    elif plan.kind == "rfft":
         x = jnp.asarray(rng.standard_normal(shp), dt)
         if plan.inverse:                       # half-spectrum input
             hshp = shp[:-1] + (plan.shape[-1] // 2 + 1,)
@@ -946,7 +1029,7 @@ def _autotune(key, plan: FFTPlan, *, batch: int = 8,
                                             model_arch=model_arch)
     times, timed_out = _time_candidates(
         [c for _, c in cands], x, labels=[lbl for lbl, _ in cands],
-        timeout_s=measure_timeout_s)
+        timeout_s=measure_timeout_s, extra=extra)
     report = {label: (round(us, 1) if us != float("inf") else "timeout")
               for (label, _), us in zip(cands, times)}
     report["n_candidates"] = n_all

@@ -6,10 +6,13 @@ repo's FFT core.  Any transformer config can select it via
 ``token_mixing="fourier"`` (DESIGN.md §4); the ``fnet_demo`` example config
 uses it end-to-end.
 
-With ``algo="auto"`` both 1-D transforms route through the plan registry
-inside :func:`repro.core.fft1d.fft`, so the (d_model,) and (seq,) dispatch
-decisions are resolved once per shape/dtype and shared with every other
-caller — :class:`repro.serve.engine.Engine` pre-warms the (d_model,) key.
+With ``algo="auto"`` both 1-D transforms route through the plan registry,
+so the (d_model,) and (seq,) dispatch decisions are resolved once per
+shape/dtype/backend and shared with every other caller —
+:class:`repro.serve.engine.Engine` pre-warms the (d_model,) key.
+``backend="pallas"`` requests the kernel path for both axis transforms;
+sizes with no kernel schedule demote to jnp with a registry-visible
+``demote_reason`` (the usual registry contract), so the model still runs.
 """
 from __future__ import annotations
 
@@ -19,11 +22,22 @@ from .complexmath import SplitComplex, from_real
 from . import fft1d
 
 
-def fourier_mix(x: jnp.ndarray, *, algo: str = "auto") -> jnp.ndarray:
+def _fft_last(z: SplitComplex, *, algo: str, backend: str) -> SplitComplex:
+    """Last-axis forward FFT honouring ``backend`` — registry-routed for
+    ``algo="auto"`` (the only path with a backend notion), direct otherwise."""
+    if algo == "auto":
+        from . import plan as _plan            # deferred: plan imports spectral's deps
+        return _plan.get_plan((z.shape[-1],), dtype=z.dtype,
+                              backend=backend)(z)
+    return fft1d.fft(z, algo=algo)
+
+
+def fourier_mix(x: jnp.ndarray, *, algo: str = "auto",
+                backend: str = "jnp") -> jnp.ndarray:
     """x: (..., seq, d_model) -> Re(FFT over d_model then over seq)."""
     z = from_real(x)
-    z = fft1d.fft(z, algo=algo)                    # over d_model (last axis)
+    z = _fft_last(z, algo=algo, backend=backend)    # over d_model (last axis)
     zr = jnp.swapaxes(z.re, -1, -2)
     zi = jnp.swapaxes(z.im, -1, -2)
-    z = fft1d.fft(SplitComplex(zr, zi), algo=algo)  # over seq
+    z = _fft_last(SplitComplex(zr, zi), algo=algo, backend=backend)  # over seq
     return jnp.swapaxes(z.re, -1, -2)

@@ -219,6 +219,119 @@ def irfft2d_fused(xf: SplitComplex, *, block_batch: int = 1,
     return out[:batch].reshape(*lead, h, w)
 
 
+def _fftconv_ref(x3: jnp.ndarray, kf: SplitComplex) -> jnp.ndarray:
+    """Differentiable jnp twin of the fused conv core: the same
+    rfft -> pointwise multiply -> irfft math at the padded length."""
+    from repro.core import complexmath as cm
+    from repro.core import fft1d
+    m = x3.shape[-1]
+    xf = fft1d.rfft(x3)                        # registry-resolved jnp algos:
+    return fft1d.irfft(cm.mul(xf, kf), m)      # same VJP as the unfused plan
+
+
+# pallas_call has no autodiff rules, but the conv core is bilinear in
+# (x, kf), so the jnp twin's VJP is exact: forward stays on the fused
+# kernel, backward runs the composed jnp transforms.  The packed filter
+# pair ef derives linearly from kf (repro.kernels.fftconv_fused
+# .pack_filter), so the bwd returns the TOTAL kf gradient through the
+# kf slot and zeros for ef — anything nonzero there would double count.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fftconv_core(x3, kf, ef, block_batch, interpret):
+    from . import fftconv_fused as _fconv
+    return _fconv.fftconv_fused_pallas(x3, ef, block_batch=block_batch,
+                                       interpret=interpret)
+
+
+def _fftconv_core_fwd(x3, kf, ef, block_batch, interpret):
+    return _fftconv_core(x3, kf, ef, block_batch, interpret), (x3, kf, ef)
+
+
+def _fftconv_core_bwd(block_batch, interpret, res, g):
+    x3, kf, ef = res
+    _, vjp = jax.vjp(_fftconv_ref, x3, kf)
+    dx, dkf = vjp(g)
+    return dx, dkf, jax.tree_util.tree_map(jnp.zeros_like, ef)
+
+
+_fftconv_core.defvjp(_fftconv_core_fwd, _fftconv_core_bwd)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _fftconv_jit(xb, kfb, efb, block_batch, interpret):
+    return _fftconv_core(xb, kfb, efb, block_batch, interpret)
+
+
+def fftconv_fused(x: jnp.ndarray, kf: SplitComplex, *, block_batch: int = 1,
+                  interpret: bool = None) -> jnp.ndarray:
+    """Fused FFT convolution over the last axis: real x (..., m) circularly
+    convolved per-row with the filter half spectra kf (..., m//2+1) ->
+    real of the broadcast shape; see :mod:`repro.kernels.fftconv_fused`.
+
+    The leading dims of x and kf broadcast; the last lead dim becomes the
+    kernel's row axis.  A kf whose lead dims broadcast to
+    just the row axis — e.g. the SSM channel bank (C, K) against
+    (B, C, L) activations — stays a (rows, m//2) shared operand staged
+    once per grid step instead of materialising per-batch copies.
+
+    NOT jitted on purpose: the filter packs into its packed-domain
+    operands (E, F) at the Python level, so a concrete filter — the
+    eager-serving and closure-constant benchmark patterns — packs in
+    float64 numpy, cached per filter identity, and enters the traced
+    graph as a constant.  Traced filters pack in-graph (the training
+    pattern: the filter changes every step, so per-step packing is
+    semantically required)."""
+    import numpy as np
+    from . import fftconv_fused as _fconv
+    if interpret is None:
+        interpret = not _on_tpu()
+    m = x.shape[-1]
+    hm = m // 2
+    lead = np.broadcast_shapes(x.shape[:-1], kf.re.shape[:-1])
+    out_shape = lead + (m,)
+    lead = lead if lead else (1,)
+    r = lead[-1]
+    batch = 1
+    for d in lead[:-1]:
+        batch *= d
+    if batch == 0 or r == 0:
+        return jnp.zeros(out_shape, x.dtype)
+    xb = jnp.broadcast_to(x, lead + (m,)).reshape(batch, r, m)
+    klead = kf.re.shape[:-1]
+    # pack in the filter's OWN lead shape (identity-cache-friendly: the
+    # broadcast copies below are fresh arrays every call, the caller's
+    # filter object is not), then broadcast E/F exactly like kf
+    e, f = _fconv.pack_filter(kf, m, x.dtype)
+
+    def _bcast(sc, bins, to2, to3):
+        if to2 is not None:
+            return SplitComplex(
+                jnp.broadcast_to(sc.re, to2 + (bins,)).reshape(r, bins),
+                jnp.broadcast_to(sc.im, to2 + (bins,)).reshape(r, bins))
+        return SplitComplex(
+            jnp.broadcast_to(sc.re, to3 + (bins,)).reshape(batch, r, bins),
+            jnp.broadcast_to(sc.im, to3 + (bins,)).reshape(batch, r, bins))
+
+    # shared bank iff the filter's lead dims broadcast to one row axis
+    shared = int(np.prod(np.broadcast_shapes(klead, (r,)), dtype=np.int64)) \
+        == r
+    to2 = np.broadcast_shapes(klead, (r,)) if shared else None
+    to3 = None if shared else lead
+    kfb = _bcast(kf, hm + 1, to2, to3)
+    efb = (_bcast(e, hm, to2, to3), _bcast(f, hm, to2, to3))
+    bb = min(block_batch, batch)
+    pad = (-batch) % bb
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0), (0, 0)))
+        if not shared:
+            bpad = ((0, pad), (0, 0), (0, 0))
+            padsc = lambda sc: SplitComplex(jnp.pad(sc.re, bpad),
+                                            jnp.pad(sc.im, bpad))
+            kfb = padsc(kfb)
+            efb = (padsc(efb[0]), padsc(efb[1]))
+    out = _fftconv_jit(xb, kfb, efb, bb, interpret)
+    return out[:batch, :r].reshape(out_shape)
+
+
 @functools.partial(jax.jit, static_argnames=("inverse", "block_batch", "n1",
                                              "interpret"))
 def fft_fourstep(x: SplitComplex, *, inverse: bool = False,

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import time
 
 
@@ -20,6 +21,9 @@ def main():
     ap.add_argument("--arch", default="h2o-danube-1.8b")
     ap.add_argument("--reduced", action="store_true",
                     help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--fft-backend", choices=["jnp", "pallas"], default=None,
+                    help="override the config's fft_backend (fft_conv plans "
+                         "+ fourier_mix) for A/B runs")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=8)
@@ -45,6 +49,8 @@ def main():
     cfg = C.get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.fft_backend is not None:
+        cfg = dataclasses.replace(cfg, fft_backend=args.fft_backend)
     dcfg = DataConfig(seq_len=args.seq_len, global_batch=args.global_batch)
     data = SyntheticLM(dcfg, cfg)
     ocfg = opt_lib.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
@@ -82,6 +88,7 @@ def main():
     with (mesh if mesh is not None else contextlib.nullcontext()), ctx():
         jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
         t0 = time.time()
+        t_steady = None                       # set after step 1 (post-compile)
         for step in range(start, args.steps):
             batch = data.batch_at(step)
             params, opt_state, metrics = jit_step(params, opt_state, batch)
@@ -90,9 +97,19 @@ def main():
                 print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f} "
                       f"gnorm {float(metrics['grad_norm']):.3f} "
                       f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+            if t_steady is None:
+                jax.block_until_ready(metrics["loss"])
+                t_steady = time.time()        # compile excluded from tok/s
             if args.ckpt_every and step and step % args.ckpt_every == 0:
                 mgr.save_async(step, (params, opt_state),
                                extra={"data_step": step + 1})
+        jax.block_until_ready(params)
+        steady_steps = args.steps - start - 1
+        if steady_steps > 0:
+            toks = steady_steps * args.global_batch * args.seq_len
+            print(f"[train] tokens/sec {toks / (time.time() - t_steady):.0f} "
+                  f"(fft_backend={cfg.fft_backend}, steady steps "
+                  f"{steady_steps})", flush=True)
         mgr.wait()
         mgr.save(args.steps, (params, opt_state),
                  extra={"data_step": args.steps})

@@ -67,6 +67,9 @@ class ModelConfig:
     # --- technique integration (DESIGN.md §4) ---
     token_mixing: str = "attention"  # attention | fourier (FNet mixing)
     use_fft_conv: bool = False       # Mamba2 conv branch via repro.core.fftconv
+    fft_backend: str = "jnp"         # jnp | pallas: backend for the FFT paths
+    #   (fft_conv plans + fourier_mix); pallas requests demote with a
+    #   registry-visible reason when no kernel schedule exists
 
     # --- numerics ---
     dtype: str = "float32"           # activation/param dtype

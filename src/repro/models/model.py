@@ -138,7 +138,8 @@ def _block_apply(bp, shared, blk: str, x, cfg: ModelConfig, positions):
         x = x + y
     elif blk == "fourier_mlp":
         from repro.core.spectral import fourier_mix
-        x = x + fourier_mix(layers.norm_apply(bp["norm1"], x, cfg))
+        x = x + fourier_mix(layers.norm_apply(bp["norm1"], x, cfg),
+                            backend=cfg.fft_backend)
         x = x + layers.mlp_apply(bp["mlp"],
                                  layers.norm_apply(bp["norm2"], x, cfg), cfg)
     elif blk == "mamba2":
@@ -285,7 +286,8 @@ def _block_prefill(bp, shared, blk: str, x, cfg: ModelConfig, cache,
             x = x + y
     elif blk == "fourier_mlp":
         from repro.core.spectral import fourier_mix
-        x = x + fourier_mix(layers.norm_apply(bp["norm1"], x, cfg))
+        x = x + fourier_mix(layers.norm_apply(bp["norm1"], x, cfg),
+                            backend=cfg.fft_backend)
         x = x + layers.mlp_apply(bp["mlp"],
                                  layers.norm_apply(bp["norm2"], x, cfg), cfg)
     elif blk == "mamba2":

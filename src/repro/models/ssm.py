@@ -45,7 +45,8 @@ def _causal_conv(u, w, b, cfg: ModelConfig, init_state=None):
     if cfg.use_fft_conv and init_state is None:
         from repro.core.fftconv import fft_conv
         # (B, S, C) -> (B, C, S) signals, depthwise kernels (C, K)
-        y = fft_conv(jnp.moveaxis(u, -1, -2), w.T[None])   # broadcast batch
+        y = fft_conv(jnp.moveaxis(u, -1, -2), w.T[None],   # broadcast batch
+                     backend=cfg.fft_backend)
         y = jnp.moveaxis(y, -2, -1)
     else:
         if init_state is None:

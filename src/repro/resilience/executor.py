@@ -62,8 +62,10 @@ def reset() -> None:
     _STATS.clear()
 
 
-def _has_tracer(x) -> bool:
-    leaves = (x.re, x.im) if isinstance(x, SplitComplex) else (x,)
+def _has_tracer(*operands) -> bool:
+    leaves = []
+    for x in operands:
+        leaves.extend((x.re, x.im) if isinstance(x, SplitComplex) else (x,))
     return any(isinstance(l, jax.core.Tracer) for l in leaves)
 
 
@@ -77,19 +79,21 @@ def _pallas_key(plan_mod, plan) -> tuple:
                               "pallas", plan.kind)
 
 
-def execute(plan, x):
-    """Entry point: ``FFTPlan.__call__`` delegates here."""
-    if not config.get("enabled") or _has_tracer(x):
-        return plan._execute(x)
+def execute(plan, x, *args):
+    """Entry point: ``FFTPlan.__call__`` delegates here.  conv-kind plans
+    carry the filter half spectrum as an extra operand (``*args``), which
+    rides through attempt and fallback unchanged."""
+    if not config.get("enabled") or _has_tracer(x, *args):
+        return plan._execute(x, *args)
     from repro.core import plan as plan_mod
     if plan.backend == "pallas":
         key = _pallas_key(plan_mod, plan)
         br = policy.breaker(key)
         if br is None or br.allow_attempt():
-            return _guarded_attempt(plan_mod, plan, x, key)
+            return _guarded_attempt(plan_mod, plan, x, key, args)
         st = _stat(key)
         st["short_circuits"] += 1
-        return _fallback(plan_mod, plan, x)
+        return _fallback(plan_mod, plan, x, args)
     if plan.demote_reason == RUNTIME_DEMOTE_REASON:
         # a runtime-demoted registry entry: the breaker still owns this
         # key, so cooldown ticks and half-open probes run from here too
@@ -97,9 +101,10 @@ def execute(plan, x):
         br = policy.breaker(key)
         if br is not None and br.state != "closed":
             if br.allow_attempt():
-                return _guarded_attempt(plan_mod, br.original_plan, x, key)
+                return _guarded_attempt(plan_mod, br.original_plan, x, key,
+                                        args)
             _stat(key)["short_circuits"] += 1
-    y = plan._execute(x)
+    y = plan._execute(x, *args)
     if config.get("guard_jnp"):
         rep = guards.check_output(plan, x, y, level="basic")
         if not rep.ok:
@@ -107,13 +112,13 @@ def execute(plan, x):
     return y
 
 
-def _guarded_attempt(plan_mod, plan, x, key: tuple):
+def _guarded_attempt(plan_mod, plan, x, key: tuple, args=()):
     """Try the pallas plan under guards; fall back to jnp on any failure."""
     st = _stat(key)
     st["attempts"] += 1
     try:
         faults.check("plan.execute", tag=_label(plan))
-        y = plan._execute(x)
+        y = plan._execute(x, *args)
         y = faults.corrupt("plan.output", y, tag=_label(plan))
         rep = guards.check_output(plan, x, y)
         if not rep.ok:
@@ -126,19 +131,19 @@ def _guarded_attempt(plan_mod, plan, x, key: tuple):
         if br.record_failure():
             plan_mod._runtime_demote(key)
         st["fallbacks"] += 1
-        return _fallback(plan_mod, plan, x)
+        return _fallback(plan_mod, plan, x, args)
     br = policy.breaker(key)
     if br is not None and br.record_success():
         plan_mod._runtime_restore(key, br.original_plan)
     return y
 
 
-def _fallback(plan_mod, plan, x):
+def _fallback(plan_mod, plan, x, args=()):
     """Execute the key's jnp schedule (guarded basic) for this call."""
     fb = plan_mod.get_plan(plan.shape, dtype=plan.dtype,
                            inverse=plan.inverse, kind=plan.kind,
                            backend="jnp")
-    y = fb._execute(x)
+    y = fb._execute(x, *args)
     rep = guards.check_output(fb, x, y, level="basic")
     if not rep.ok:
         # the fallback failed too: nothing left to recover with — report

@@ -89,7 +89,12 @@ def finite_check(y) -> bool:
 def parseval_ratio(plan, x, y) -> float:
     """Energy ratio (expected 1.0) between output and input of one plan
     execution, with the transform's 1/N scalings folded in.  Returns 1.0
-    when the input energy is ~0 (nothing to compare against)."""
+    when the input energy is ~0 (nothing to compare against).  conv-kind
+    plans have no input→output energy identity (the filter reshapes the
+    spectrum arbitrarily), so the check is vacuously 1.0 for them —
+    conv executions are covered by the finite scan."""
+    if plan.kind.startswith("conv"):
+        return 1.0
     n = 1
     for d in plan.shape:
         n *= int(d)

@@ -298,6 +298,8 @@ def trace_plan(plan, *, arch="wormhole_n300", batch: int = 1) -> PlanTrace:
 
     if getattr(plan, "kind", "c2c") == "rfft":
         stages = _rfft_stages(plan, a, batch=batch, elem_bytes=elem)
+    elif getattr(plan, "kind", "c2c").startswith("conv"):
+        stages = _conv_stages(plan, a, batch=batch, elem_bytes=elem)
     elif len(plan.shape) == 1:
         n = plan.shape[0]
         stages.append(_fft_pass_stage(
@@ -602,6 +604,79 @@ def _rfft_fused2d_stage(a: Arch, *, h: int, w: int, batch: int,
                      dram_out=dram_out, sram_read=sram_rw,
                      sram_write=sram_rw, sram_high_water=high_water,
                      grid_steps=grid_steps)
+
+
+def _fftconv_fused_stage(a: Arch, *, m: int, rows: int,
+                         elem_bytes: int) -> TraceStage:
+    """The fused spectral-convolution kernel
+    (:mod:`repro.kernels.fftconv_fused`, conv-kind plans with
+    ``algo="fused"``): ONE stage moving one real plane in, the packed
+    filter pair (E, F) in, and one real plane out — the product spectrum never
+    exists outside VMEM, versus the unfused path's six-plane traffic
+    (real in / spectrum out / spectrum + filter in / product out / product
+    in / real out; see :func:`_conv_stages`).  ``rows`` is the number of
+    convolved signals resident per grid step (the wrapper's row axis —
+    e.g. the SSM channel count); the byte accounting mirrors the kernel's
+    real operand buffers exactly so the benchmark's model-vs-counted
+    traffic ratio is 1.0 by construction."""
+    hm = m // 2
+    half = elem_bytes // 2
+    real_plane = float(rows) * m * half
+    # the packed-domain filter operands E and F: two complex length-m/2
+    # vectors per row (untangle, pointwise multiply and pre-tangle all
+    # folded in — see fftconv_fused.pack_filter)
+    ef_bytes = 2.0 * rows * hm * elem_bytes
+    # both passes run at the packed half length: forward + inverse
+    # length-m/2 four-step tables only
+    tw = 2 * fourstep_table_bytes(hm, elem_bytes=elem_bytes)
+    flops = (2.0 * _fourstep_pass_flops(hm, float(rows))  # fwd + inv passes
+             + 14.0 * rows * hm                  # E*Z + F*conj(rev Z)
+             + 2.0 * rows * hm)                  # 2/m output scale
+    packed = float(rows) * hm * elem_bytes               # the complex rows
+    # each four-step pass streams its (equal-byte) complex tile through
+    # SRAM ~3x; the packed-domain multiply-add adds one spectrum round
+    sram_rw = 2 * 3 * packed + 3 * packed
+    # working set: ping-pong of the packed complex rows plus the staged
+    # packed filter pair and both table sets
+    high_water = 2 * rows * hm * elem_bytes + int(ef_bytes) + tw
+    return _mk_stage("fused_fftconv", a, flops=flops,
+                     dram_in=real_plane + ef_bytes + tw,
+                     dram_out=real_plane,
+                     sram_read=sram_rw, sram_write=sram_rw,
+                     sram_high_water=high_water, grid_steps=1)
+
+
+def _conv_stages(plan, a: Arch, *, batch: int,
+                 elem_bytes: int) -> List[TraceStage]:
+    """conv-kind plans (fused rfft -> multiply -> irfft).  ``algo="fused"``
+    traces to ONE VMEM-resident stage; ``algo="unfused"`` traces the
+    registry-composed baseline — forward packed rfft, a pointwise multiply
+    with its own spectrum round-trip, and the Hermitian-extended inverse —
+    whose summed DRAM bytes are the six-plane traffic the fused kernel
+    deletes."""
+    m = plan.n
+    if plan.algo == "fused":
+        return [_fftconv_fused_stage(a, m=m, rows=batch,
+                                     elem_bytes=elem_bytes)]
+    hm = m // 2
+    spec = float(batch) * (hm + 1) * elem_bytes
+    kw = dict(radix=plan.radix, block_batch=plan.block_batch,
+              elem_bytes=elem_bytes)
+    return [
+        _fft_pass_stage("conv_rfft_inner", a, n=m // 2, rows=batch,
+                        algo="auto", **kw),
+        _untangle_stage("conv_rfft_untangle", a, n=m, rows=batch,
+                        elem_bytes=elem_bytes),
+        # pointwise multiply: product + filter spectra in, product out
+        _mk_stage("conv_pointwise_mul", a, flops=6.0 * batch * (hm + 1),
+                  dram_in=2 * spec, dram_out=spec,
+                  sram_read=2 * spec, sram_write=spec,
+                  sram_high_water=3 * (hm + 1) * elem_bytes),
+        _fft_pass_stage("conv_irfft_inner", a, n=m, rows=batch,
+                        algo="auto", **kw),
+        _untangle_stage("conv_irfft_extend", a, n=m, rows=batch,
+                        elem_bytes=elem_bytes),
+    ]
 
 
 def predict_cost(plan, *, arch="wormhole_n300", batch: int = 1) -> float:

@@ -1,0 +1,55 @@
+"""The STFT audio frontend example (PR 10 satellite): previously
+example-only untested code — now its frame rfft routes through the plan
+registry with ``backend=`` and its first frame is pinned against numpy."""
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "examples"))
+from audio_frontend import stft  # noqa: E402
+
+from repro.core import clear_plan_cache, get_plan  # noqa: E402
+
+
+def _wave(n=4000, sr=16_000):
+    rng = np.random.default_rng(0)
+    t = np.arange(n, dtype=np.float32) / sr
+    return (np.sin(2 * np.pi * 440 * t)
+            + 0.1 * rng.standard_normal(n).astype(np.float32))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_stft_first_frame_matches_numpy(backend):
+    """The satellite pin: first-frame magnitudes vs numpy <= 1e-6
+    (relative), on BOTH backends — the backend routes through the
+    registry, it must not change the numbers."""
+    wave = _wave()
+    mag = np.asarray(stft(jnp.asarray(wave), backend=backend))
+    ref = np.abs(np.fft.rfft(wave[:512].astype(np.float64)
+                             * np.hanning(512)))
+    assert mag.shape == (1 + (4000 - 512) // 160, 257)
+    err = np.abs(mag[0] - ref).max() / ref.max()
+    assert err <= 1e-6, (backend, err)
+
+
+def test_stft_pallas_request_goes_through_registry():
+    """backend="pallas" interns the (512,) rfft key via the registry —
+    demoted or not, the request is visible, never a crash."""
+    clear_plan_cache()
+    stft(jnp.asarray(_wave(1024)), backend="pallas")
+    p = get_plan((512,), kind="rfft", backend="pallas")
+    assert p.algo                       # resolved (kernel path or demoted)
+    if p.backend == "jnp":
+        assert p.demote_reason          # demotions carry their reason
+    clear_plan_cache()
+
+
+def test_stft_batched_leading_dims():
+    wave = np.stack([_wave(), 2.0 * _wave()])
+    mag = np.asarray(stft(jnp.asarray(wave)))
+    assert mag.shape == (2, 1 + (4000 - 512) // 160, 257)
+    np.testing.assert_allclose(mag[1], 2.0 * mag[0], rtol=1e-5)

@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (clear_plan_cache, fft, fft2, fft_conv, from_complex,
-                        get_plan, ifft, irfft, irfft2, rfft, rfft2,
-                        to_complex)
+from repro.core import (circular_conv, clear_plan_cache, fft, fft2, fft_conv,
+                        from_complex, get_plan, ifft, irfft, irfft2, rfft,
+                        rfft2, to_complex)
 from repro.core import complexmath as cm
 from repro.core.complexmath import SplitComplex
 
@@ -157,6 +157,67 @@ def test_rfft_pallas_demotes_with_registry_visible_reason():
     p2 = get_plan((16, 32), kind="rfft", backend="pallas")
     assert p2.backend == "pallas" and p2.algo == "fused"
     assert p2.demote_reason is None
+    clear_plan_cache()
+
+
+CONV_BATCHES = ((), (3,), (2, 3))        # scalar and ragged leading dims
+CONV_SIGLENS = (37, 100, 256, 1000)      # odd / even / pow2 / non-pow2
+CONV_KERLENS = (1, 3, 33, 65)            # odd kernel lengths (SSM-style)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conv_sweep_causal_matches_np_convolve(backend):
+    """Seeded fft_conv sweep vs np.convolve: odd kernel lengths, causal
+    truncation to the signal length, ragged batch dims, both backends
+    (padded non-pow2 lengths route pallas onto the fused conv kernel;
+    the truncation semantics must not depend on the backend)."""
+    clear_plan_cache()
+    for batch in CONV_BATCHES:
+        for seed, (L, K) in enumerate(zip(CONV_SIGLENS, CONV_KERLENS)):
+            rng = np.random.default_rng(seed + 10 * len(batch))
+            sig = rng.standard_normal(batch + (L,)).astype(np.float32)
+            ker = rng.standard_normal(batch + (K,)).astype(np.float32)
+            got = np.asarray(fft_conv(jnp.asarray(sig), jnp.asarray(ker),
+                                      backend=backend))
+            flat_s = sig.reshape(-1, L)
+            flat_k = ker.reshape(-1, K)
+            ref = np.stack([np.convolve(s, kk)[:L]
+                            for s, kk in zip(flat_s, flat_k)])
+            _assert_close(got.reshape(-1, L), ref, 2e-4)
+    clear_plan_cache()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conv_sweep_circular_matches_fft_reference(backend):
+    """Seeded circular_conv sweep vs the float64 FFT reference: pow2
+    lengths hit the fused kernel on pallas, non-pow2 lengths demote (the
+    values must stay correct either way)."""
+    clear_plan_cache()
+    for batch in CONV_BATCHES:
+        for seed, n in enumerate((54, 64, 256, 300)):
+            rng = np.random.default_rng(seed + 100 * len(batch))
+            sig = rng.standard_normal(batch + (n,)).astype(np.float32)
+            ker = rng.standard_normal(batch + (n,)).astype(np.float32)
+            got = np.asarray(circular_conv(jnp.asarray(sig),
+                                           jnp.asarray(ker),
+                                           backend=backend))
+            ref = np.real(np.fft.ifft(
+                np.fft.fft(sig.astype(np.float64))
+                * np.fft.fft(ker.astype(np.float64))))
+            _assert_close(got, ref, 2e-4)
+    clear_plan_cache()
+
+
+def test_conv_pallas_demotes_with_registry_visible_reason():
+    """Circular lengths with no kernel path (non-pow2) demote to the
+    unfused jnp schedule with the reason interned on the plan."""
+    clear_plan_cache()
+    p = get_plan((300,), kind="conv_circular", backend="pallas")
+    assert p.backend == "jnp" and p.algo == "unfused"
+    assert "power-of-two" in p.demote_reason
+    # ...while the causal kind always pads to pow2 and stays fused
+    p2 = get_plan((256,), kind="conv_causal", backend="pallas")
+    assert p2.algo == "fused" and p2.demote_reason is None
     clear_plan_cache()
 
 

@@ -1,0 +1,210 @@
+"""The fused spectral-convolution kernel (PR 10): correctness of the
+VMEM-resident rfft -> pointwise multiply -> irfft pass against float64
+numpy, the conv plan registry keys and their demotions, the per-plan
+filter-spectrum cache (the kernel-side rfft runs ONCE per plan key for
+static filters), the packed-domain filter cache, and gradient parity of
+the custom-VJP pallas path against the jnp twin."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clear_plan_cache, fft_conv, circular_conv, get_plan
+from repro.core import fftconv as fftconv_mod
+from repro.core.complexmath import SplitComplex
+from repro.kernels import fftconv_fused as fconv
+from repro.kernels import ops
+
+
+def _kf64(k, m):
+    pad = np.zeros(k.shape[:-1] + (m,), np.float64)
+    pad[..., : k.shape[-1]] = k
+    return np.fft.rfft(pad)
+
+
+def _split(c):
+    return SplitComplex(jnp.asarray(c.real, jnp.float32),
+                        jnp.asarray(c.imag, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Raw kernel wrapper
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [4, 8, 64, 1024])
+@pytest.mark.parametrize("rows", [1, 3, 64])
+def test_fused_kernel_matches_numpy_shared_bank(m, rows):
+    """Shared filter bank (rows, m/2+1) against (batch, rows, m) — the SSM
+    channel-bank layout — including odd row counts (no pairing
+    constraint) and the tiny-length edge m=4."""
+    rng = np.random.default_rng(m + rows)
+    x = rng.standard_normal((2, rows, m)).astype(np.float32)
+    kf = _kf64(rng.standard_normal((rows, m)), m)
+    ref = np.fft.irfft(np.fft.rfft(x.astype(np.float64)) * kf[None], m)
+    out = np.asarray(ops.fftconv_fused(jnp.asarray(x), _split(kf)),
+                     np.float64)
+    err = np.linalg.norm(out - ref) / np.linalg.norm(ref)
+    assert err < 2e-6, err
+
+
+def test_fused_kernel_per_batch_banks():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((3, 5, 512)).astype(np.float32)
+    kf = _kf64(rng.standard_normal((3, 5, 512)), 512)
+    ref = np.fft.irfft(np.fft.rfft(x.astype(np.float64)) * kf, 512)
+    out = np.asarray(ops.fftconv_fused(jnp.asarray(x), _split(kf)),
+                     np.float64)
+    assert np.linalg.norm(out - ref) / np.linalg.norm(ref) < 2e-6
+
+
+def test_fused_kernel_rejects_bad_lengths():
+    for m in (3, 6, 768):
+        with pytest.raises(ValueError, match="power-of-two"):
+            fconv._check_len(m)
+
+
+# ---------------------------------------------------------------------------
+# Packed-domain filter operands
+# ---------------------------------------------------------------------------
+
+def test_pack_filter_concrete_matches_traced():
+    """The float64-numpy pack (concrete filters) and the in-graph jnp pack
+    (traced training parameters) build the same E/F operands."""
+    m = 256
+    rng = np.random.default_rng(1)
+    kf = _split(_kf64(rng.standard_normal((4, m)), m))
+    e_np, f_np = fconv.pack_filter(kf, m, jnp.float32)
+    e_tr, f_tr = jax.jit(
+        lambda k: fconv.pack_filter(k, m, jnp.float32))(kf)
+    for a, b in ((e_np, e_tr), (f_np, f_tr)):
+        scale = float(np.abs(np.asarray(a.re)).max())
+        np.testing.assert_allclose(np.asarray(a.re), np.asarray(b.re),
+                                   atol=1e-6 * scale)
+        np.testing.assert_allclose(np.asarray(a.im), np.asarray(b.im),
+                                   atol=1e-6 * scale)
+
+
+def test_pack_filter_identity_cache():
+    """One filter object across calls -> one pack; a fresh filter array
+    recomputes and replaces the entry (never stale)."""
+    fconv.clear_pack_cache()
+    m = 128
+    rng = np.random.default_rng(2)
+    kf = _split(_kf64(rng.standard_normal((3, m)), m))
+    ef1 = fconv.pack_filter(kf, m, jnp.float32)
+    ef2 = fconv.pack_filter(kf, m, jnp.float32)
+    assert ef1 is ef2                      # identity hit, no recompute
+    kf3 = _split(_kf64(rng.standard_normal((3, m)), m))
+    ef3 = fconv.pack_filter(kf3, m, jnp.float32)
+    assert ef3 is not ef1
+    assert len(fconv._PACK_CACHE) == 1     # one entry per shape/length key
+    fconv.clear_pack_cache()
+    assert not fconv._PACK_CACHE
+
+
+# ---------------------------------------------------------------------------
+# Conv plans: keys, demotions, the filter-spectrum cache
+# ---------------------------------------------------------------------------
+
+def test_conv_plan_keys_and_demotions():
+    clear_plan_cache()
+    pf = get_plan((1024,), kind="conv_causal", backend="pallas")
+    assert (pf.algo, pf.backend, pf.demote_reason) == \
+        ("fused", "pallas", None)
+    pu = get_plan((1024,), kind="conv_causal", backend="jnp")
+    assert (pu.algo, pu.backend) == ("unfused", "jnp")
+    assert pf is not pu                    # backend is part of the key
+    # non-power-of-two circular length: demote with a visible reason
+    pd = get_plan((768,), kind="conv_circular", backend="pallas")
+    assert pd.algo == "unfused" and pd.backend == "jnp"
+    assert "power-of-two" in pd.demote_reason
+    # conv plans are 1-D forward-only
+    with pytest.raises(ValueError, match="1-D"):
+        get_plan((8, 8), kind="conv_causal")
+    with pytest.raises(ValueError, match="inverse"):
+        get_plan((1024,), kind="conv_causal", inverse=True)
+
+
+def test_filter_spectrum_cached_once_per_plan_key():
+    """The satellite guarantee: with a static filter, the kernel-side rfft
+    of the filter runs ONCE per conv plan key across repeated calls."""
+    clear_plan_cache()
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 4, 200)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((4, 33)).astype(np.float32))
+    for _ in range(4):
+        fft_conv(x, k, backend="pallas")
+    (key, stats), = fftconv_mod.SPECTRUM_STATS.items()
+    assert key[2:] == ("conv_causal", "pallas", "fused")
+    assert stats == {"computes": 1, "hits": 3}
+    # a fresh filter array recomputes (the cache is never stale)
+    k2 = jnp.asarray(rng.standard_normal((4, 33)).astype(np.float32))
+    fft_conv(x, k2, backend="pallas")
+    assert fftconv_mod.SPECTRUM_STATS[key] == {"computes": 2, "hits": 3}
+    # traced filters bypass the cache entirely (recomputed in-graph)
+    jax.jit(lambda a, b: fft_conv(a, b, backend="pallas"))(x, k2)
+    assert fftconv_mod.SPECTRUM_STATS[key] == {"computes": 2, "hits": 3}
+    clear_plan_cache()
+    assert not fftconv_mod.SPECTRUM_STATS
+
+
+# ---------------------------------------------------------------------------
+# End-to-end conv entry points and gradients
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fft_conv_causal_matches_direct(backend):
+    clear_plan_cache()
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((4, 16, 1000)).astype(np.float32)
+    k = rng.standard_normal((16, 65)).astype(np.float32)
+    ref = np.stack([[np.convolve(x[b, c], k[c])[:1000] for c in range(16)]
+                    for b in range(4)])
+    out = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(k),
+                              backend=backend), np.float64)
+    assert np.linalg.norm(out - ref) / np.linalg.norm(ref) < 2e-6
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_circular_conv_matches_fft_reference(backend):
+    clear_plan_cache()
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((2, 8, 256)).astype(np.float32)
+    k = rng.standard_normal((8, 256)).astype(np.float32)
+    ref = np.real(np.fft.ifft(np.fft.fft(x.astype(np.float64))
+                              * np.fft.fft(k.astype(np.float64))[None]))
+    out = np.asarray(circular_conv(jnp.asarray(x), jnp.asarray(k),
+                                   backend=backend), np.float64)
+    assert np.linalg.norm(out - ref) / np.linalg.norm(ref) < 2e-6
+
+
+def test_fused_gradients_match_jnp_backend():
+    """The pallas conv path trains: its custom VJP (the bilinear jnp twin)
+    produces the same gradients as the unfused jnp backend."""
+    clear_plan_cache()
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((2, 4, 300)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((4, 33)).astype(np.float32))
+
+    def loss(backend):
+        return lambda xx, kk: jnp.sum(
+            fft_conv(xx, kk, backend=backend) ** 2)
+
+    gx_p, gk_p = jax.grad(loss("pallas"), argnums=(0, 1))(x, k)
+    gx_j, gk_j = jax.grad(loss("jnp"), argnums=(0, 1))(x, k)
+    rx = float(jnp.abs(gx_p - gx_j).max() / jnp.abs(gx_j).max())
+    rk = float(jnp.abs(gk_p - gk_j).max() / jnp.abs(gk_j).max())
+    assert rx < 1e-4 and rk < 1e-4, (rx, rk)
+
+
+def test_fused_conv_under_jit_traced_filter():
+    """The training pattern end-to-end: x AND filter traced (jit-time
+    parameters), the filter packs in-graph, values match the eager path."""
+    clear_plan_cache()
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 3, 500)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((3, 17)).astype(np.float32))
+    eager = fft_conv(x, k, backend="pallas")
+    jitted = jax.jit(lambda a, b: fft_conv(a, b, backend="pallas"))(x, k)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager),
+                               atol=1e-5)

@@ -443,6 +443,38 @@ def test_vmem_high_water_fused_rfft_1024_fits():
     clear_plan_cache()
 
 
+def test_vmem_high_water_fused_conv_pinned():
+    """PR 10's model pin: the fused spectral-convolution stage's working
+    set is the packed complex-row ping-pong (2 x rows x m/2 split-complex)
+    plus the packed filter pair E/F (same bytes again) plus both
+    half-length four-step table sets.  At the benchmark's 1024x64 shape
+    that is 1077248 B (fits 16 MiB); at the SSM training shape
+    (m=8192, 160 conv channels) it is 21168128 B — an honest bust that
+    says the channel bank must split across grid steps on real silicon."""
+    conv = FFTPlan(shape=(1024,), algo="fused", backend="pallas",
+                   block_batch=1, kind="conv_causal")
+    t = tttrace.trace_plan(conv, arch="tpu_v5e", batch=64)
+    assert [s.name for s in t.stages] == ["fused_fftconv"]   # ONE stage
+    assert tttrace.fourstep_table_bytes(512) == 14336        # (16, 32) split
+    ping = 2 * 64 * 512 * 8
+    assert t.sram_high_water == 2 * ping + 2 * 14336 == 1077248
+    assert t.fits and t.sram_budget == 16 * MIB
+    # the SSM-shaped trace: busts VMEM, and the model says so
+    big = tttrace.trace_plan(
+        FFTPlan(shape=(8192,), algo="fused", backend="pallas",
+                block_batch=1, kind="conv_causal"),
+        arch="tpu_v5e", batch=160)
+    assert big.sram_high_water == 21168128 and not big.fits
+    # the fused stage deletes the unfused path's six-plane traffic: > 3x
+    # fewer HBM bytes at the SSM shape
+    unf = tttrace.trace_plan(
+        FFTPlan(shape=(8192,), algo="unfused", backend="jnp",
+                block_batch=8, kind="conv_causal"),
+        arch="tpu_v5e", batch=160)
+    assert len(unf.stages) == 5                              # six-plane path
+    assert unf.dram_bytes / big.dram_bytes > 3.0
+
+
 def test_predicted_ordering_fused_rfft_beats_jnp_schedule():
     """prune="model" support for rfft keys: the fused kernel must outrank
     the jnp schedule wherever it fits."""
